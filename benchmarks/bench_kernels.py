@@ -1,0 +1,54 @@
+"""Kernel-level benchmark: fused Pallas dispatch/combine vs the jnp path.
+
+On this CPU container the kernels run in interpret mode (slow by
+construction), so wall-time is measured for the JNP path only; the kernel
+row reports the analytic HBM-traffic saving — the quantity the fusion
+exists for (logits never hit HBM; see kernels/soft_moe_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MoEConfig
+from repro.core import moe_apply, moe_init
+
+from .common import emit, time_fn
+
+
+def _traffic_bytes(m, d, s, fused: bool) -> int:
+    """HBM bytes for dispatch+combine weight computation (bf16 acts,
+    f32 logits): unfused materializes logits (m·s) twice + weights twice."""
+    x = m * d * 2
+    phi = d * s * 2
+    slots = s * d * 2
+    y = m * d * 2
+    if fused:
+        # x read twice (dispatch+combine), phi twice, slots w+r, y write
+        return 2 * x + 2 * phi + 2 * slots + y
+    logits = m * s * 4
+    weights = m * s * 4
+    # logits w+r per direction, weights w+r per direction
+    return 2 * x + 2 * phi + 2 * slots + y + 2 * (logits + weights) * 2
+
+
+def run():
+    m, d = 256, 256
+    for n in (64, 256):
+        cfg = MoEConfig(variant="soft", num_experts=n, expert_d_ff=512)
+        params = moe_init(jax.random.PRNGKey(0), d, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, m, d))
+        jnp_fn = jax.jit(
+            lambda p, xx, _c=cfg: moe_apply(p, _c, xx, use_kernel=False)[0]
+        )
+        us = time_fn(jnp_fn, params, x)
+        s = n * cfg.slots_per_expert
+        unfused = _traffic_bytes(m, d, s, fused=False)
+        fused = _traffic_bytes(m, d, s, fused=True)
+        emit(f"kernel_softmoe_jnp/{n}e", us,
+             f"hbm_bytes={unfused}")
+        emit(f"kernel_softmoe_fused/{n}e", 0.0,
+             f"hbm_bytes={fused} saving={unfused / fused:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

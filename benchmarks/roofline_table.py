@@ -1,0 +1,56 @@
+"""Render the §Roofline table (EXPERIMENTS.md) from dry-run JSONL output."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path):
+    rows = []
+    with open(path) as f:
+        for line in f:
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    return rows
+
+
+def fmt(rows):
+    out = []
+    out.append(
+        "| cell | mesh | t_compute | t_memory | t_collective | bottleneck |"
+        " roofline frac | useful FLOPs | temp/dev (TPU-corr) |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("status") == "skipped":
+            out.append(
+                f"| {r['cell']} | — | — | — | — | SKIP | — | — |"
+                f" {r['reason'][:60]} |"
+            )
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['cell']} | {r.get('mesh')} | ERROR: "
+                       f"{r.get('error', '?')[:80]} | | | | | | |")
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]
+        out.append(
+            f"| {r['cell']} | {r['mesh']} "
+            f"| {rf['t_compute_s']*1e3:.1f}ms | {rf['t_memory_s']*1e3:.1f}ms "
+            f"| {rf['t_collective_s']*1e3:.1f}ms | {rf['bottleneck']} "
+            f"| {rf['roofline_fraction']:.3f} "
+            f"| {rf['useful_flops_fraction']:.2f} "
+            f"| {mem.get('tpu_corrected_temp_bytes', 0)/1e9:.1f}GB |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_single_pod.jsonl"
+    print(fmt(load(path)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  * bench_experts_scaling — Fig. 6/7 (step time vs experts, fixed slots)
+  * bench_dropping        — App. B (token dropping, sparse vs soft)
+  * bench_ablations       — Table 3 (routing ablations ordering)
+  * bench_pareto          — Fig. 3 (cost/quality points, micro)
+  * bench_kernels         — fused kernel HBM-traffic model + jnp timing
+  * bench_inspection      — §5/Fig. 9 routing statistics
+
+Prints ``name,us_per_call,derived`` CSV. Roofline tables render separately
+via ``python -m benchmarks.roofline_table results/<file>.jsonl``.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    from . import (
+        bench_ablations,
+        bench_dropping,
+        bench_experts_scaling,
+        bench_inspection,
+        bench_kernels,
+        bench_pareto,
+    )
+
+    mods = {
+        "experts_scaling": bench_experts_scaling,
+        "dropping": bench_dropping,
+        "ablations": bench_ablations,
+        "pareto": bench_pareto,
+        "kernels": bench_kernels,
+        "inspection": bench_inspection,
+    }
+    print("name,us_per_call,derived")
+    for name, mod in mods.items():
+        if only and only != name:
+            continue
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""MoE core: Soft MoE (the paper's technique), sparse baselines, ablations.
+
+``moe_init`` / ``moe_apply`` dispatch on ``MoEConfig.variant`` so models
+treat every router uniformly.
+"""
+from __future__ import annotations
+
+from .ablations import ablation_apply, ablation_init  # noqa: F401
+from .soft_moe import soft_moe_apply, soft_moe_init, soft_moe_weights  # noqa: F401
+from .sparse_moe import (  # noqa: F401
+    experts_choice_apply,
+    sparse_moe_init,
+    tokens_choice_apply,
+)
+
+_ABLATIONS = ("identity", "uniform", "soft_uniform", "uniform_soft")
+
+
+def resolve_moe_cfg(moe_cfg, d_ff_default: int):
+    """expert_d_ff == 0 means 'inherit the model d_ff'."""
+    import dataclasses
+
+    if moe_cfg.expert_d_ff == 0:
+        if d_ff_default <= 0:
+            raise ValueError(
+                "MoE layer with expert_d_ff=0 needs a model d_ff to inherit"
+            )
+        return dataclasses.replace(moe_cfg, expert_d_ff=d_ff_default)
+    return moe_cfg
+
+
+def moe_init(rng, d_model: int, moe_cfg, style: str = "gated"):
+    assert moe_cfg.expert_d_ff > 0, "resolve expert_d_ff first (block_init)"
+    if moe_cfg.variant == "soft" or moe_cfg.variant in _ABLATIONS:
+        return soft_moe_init(rng, d_model, moe_cfg, style)
+    if moe_cfg.variant in ("tokens_choice", "experts_choice"):
+        return sparse_moe_init(rng, d_model, moe_cfg, style)
+    raise ValueError(f"unknown MoE variant {moe_cfg.variant!r}")
+
+
+def moe_apply(params, moe_cfg, x, act: str = "silu",
+              use_kernel: bool = False):
+    if moe_cfg.variant == "soft":
+        return soft_moe_apply(params, moe_cfg, x, act, use_kernel=use_kernel)
+    if moe_cfg.variant in _ABLATIONS:
+        return ablation_apply(params, moe_cfg, x, act)
+    if moe_cfg.variant == "tokens_choice":
+        return tokens_choice_apply(params, moe_cfg, x, act)
+    if moe_cfg.variant == "experts_choice":
+        return experts_choice_apply(params, moe_cfg, x, act)
+    raise ValueError(f"unknown MoE variant {moe_cfg.variant!r}")

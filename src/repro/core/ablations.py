@@ -1,0 +1,71 @@
+"""Fixed-routing ablations (paper Table 3 / Appendix A).
+
+  * identity      — token i -> expert i (round-robin); D, C are (normalized)
+                    one-hot; equals the identity matrix when m == n·p.
+  * uniform       — D = 1/m everywhere, C = 1/(n·p) everywhere.
+  * soft_uniform  — learned dispatch D, uniform combine C.
+  * uniform_soft  — uniform dispatch D, learned combine C.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..layers.mlp import experts_apply
+from .soft_moe import soft_moe_init, soft_moe_weights
+
+
+def ablation_init(rng, d_model: int, moe_cfg, style: str = "gated"):
+    # Same param structure as Soft MoE (Phi unused by the fixed sides, but
+    # kept so checkpoints/configs stay interchangeable).
+    return soft_moe_init(rng, d_model, moe_cfg, style)
+
+
+def _round_robin_dispatch(m: int, n: int, p: int):
+    """D[t, slot] one-hot on slot = t mod (n·p), normalized per slot."""
+    slots = n * p
+    assign = jnp.arange(m) % slots
+    d = jax.nn.one_hot(assign, slots)  # (m, slots)
+    d = d / jnp.clip(d.sum(0, keepdims=True), 1.0)
+    return d.reshape(m, n, p)
+
+
+def _round_robin_combine(m: int, n: int, p: int):
+    """C[t, slot]: token t combines slot t mod (n·p) only."""
+    slots = n * p
+    assign = jnp.arange(m) % slots
+    return jax.nn.one_hot(assign, slots).reshape(m, n, p)
+
+
+def ablation_apply(params, moe_cfg, x, act: str = "silu"):
+    b, m, d = x.shape
+    n, p = moe_cfg.num_experts, moe_cfg.slots_per_expert
+    variant = moe_cfg.variant
+
+    learned_d, learned_c = None, None
+    if variant in ("soft_uniform", "uniform_soft"):
+        learned_d, learned_c = soft_moe_weights(
+            x, params["phi"], params["scale"]
+        )
+
+    if variant == "identity":
+        d_w = jnp.broadcast_to(_round_robin_dispatch(m, n, p), (b, m, n, p))
+        c_w = jnp.broadcast_to(_round_robin_combine(m, n, p), (b, m, n, p))
+    elif variant == "uniform":
+        d_w = jnp.full((b, m, n, p), 1.0 / m)
+        c_w = jnp.full((b, m, n, p), 1.0 / (n * p))
+    elif variant == "soft_uniform":  # learned dispatch / uniform combine
+        d_w = learned_d
+        c_w = jnp.full((b, m, n, p), 1.0 / (n * p))
+    elif variant == "uniform_soft":  # uniform dispatch / learned combine
+        d_w = jnp.full((b, m, n, p), 1.0 / m)
+        c_w = learned_c
+    else:
+        raise ValueError(f"unknown ablation variant {variant!r}")
+
+    slots = jnp.einsum("bmd,bmnp->bnpd", x.astype(jnp.float32), d_w)
+    ys = slots.astype(x.dtype).transpose(1, 0, 2, 3).reshape(n, b * p, d)
+    ys = experts_apply(params["experts"], ys, act)
+    ys = ys.reshape(n, b, p, d).transpose(1, 0, 2, 3)
+    y = jnp.einsum("bnpd,bmnp->bmd", ys.astype(jnp.float32), c_w)
+    return y.astype(x.dtype), {"moe_aux_loss": jnp.zeros((), jnp.float32)}

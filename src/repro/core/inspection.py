@@ -1,0 +1,64 @@
+"""Model inspection (paper §5, Fig. 9 / App. G): statistics of the learned
+dispatch/combine weights.
+
+  * token_contributions — total dispatch weight each token sends to all
+    slots (Fig. 9 left: heavy-tailed; no token at zero = no dropping).
+  * expert_importance — per-slot combine mass summed over tokens,
+    normalized by its min (Fig. 9 middle: 3–14× spread across experts).
+  * cumulative_slot_weight — how many tokens cover a given fraction of a
+    slot's dispatch mass (Fig. 9 right / App. G cumulative curves).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from .soft_moe import soft_moe_weights
+
+
+def routing_stats(x, params, moe_cfg) -> Dict[str, jnp.ndarray]:
+    """x: (b, m, d); params: a Soft-MoE layer's params."""
+    d_w, c_w = soft_moe_weights(x, params["phi"], params["scale"])
+    b, m, n, p = d_w.shape
+    d_flat = d_w.reshape(b, m, n * p)
+    c_flat = c_w.reshape(b, m, n * p)
+
+    token_contrib = d_flat.sum(-1)  # (b, m): summed dispatch per token
+    expert_importance = c_flat.sum(1)  # (b, S): combine mass per slot
+    expert_importance = expert_importance / jnp.maximum(
+        expert_importance.min(axis=-1, keepdims=True), 1e-9
+    )
+
+    # cumulative dispatch: sort each slot's weights desc, cumsum over tokens
+    sorted_w = -jnp.sort(-d_flat, axis=1)  # (b, m, S) desc over tokens
+    cum = jnp.cumsum(sorted_w, axis=1)
+
+    def tokens_to_cover(frac):
+        covered = cum >= frac  # (b, m, S)
+        return covered.argmax(axis=1) + 1  # first index reaching frac
+
+    return {
+        "token_contribution": token_contrib,
+        "token_contribution_max": token_contrib.max(),
+        "token_contribution_min": token_contrib.min(),
+        "expert_importance": expert_importance,
+        "expert_importance_spread": expert_importance.max(-1).mean(),
+        "tokens_for_50pct": tokens_to_cover(0.5),
+        "tokens_for_90pct": tokens_to_cover(0.9),
+        "max_dispatch_weight": d_w.max(),
+        "max_combine_weight": c_w.max(),
+    }
+
+
+def summarize(stats: Dict[str, jnp.ndarray]) -> Dict[str, float]:
+    out = {}
+    for k, v in stats.items():
+        arr = jnp.asarray(v)
+        if arr.ndim == 0:
+            out[k] = float(arr)
+        else:
+            out[f"{k}_mean"] = float(arr.mean())
+            out[f"{k}_p90"] = float(jnp.percentile(arr.astype(jnp.float32),
+                                                   90))
+    return out

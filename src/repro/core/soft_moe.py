@@ -1,0 +1,125 @@
+"""Soft MoE — the paper's contribution (Puigcerver et al., ICLR 2024, §2).
+
+Faithful to Algorithm 1 + the Algorithm 2 L2-normalization fix:
+
+    logits = l2norm(X) @ (scale * l2norm(Phi))        # (m, n·p)
+    D = softmax over tokens  (per slot / column)       # dispatch
+    C = softmax over slots   (per token / row)         # combine
+    X~ = Dᵀ X ; Y~_i = f_{⌊i/p⌋}(X~_i) ; Y = C Y~
+
+Every op is continuous/differentiable; there is no top-k/sort anywhere on
+this path (the paper's perf point). Experts are stacked along a leading
+axis so they shard over the `model` mesh axis (expert parallelism); Phi is
+sharded over its slot axis the same way.
+
+``use_kernel=True`` routes dispatch/combine through the fused Pallas TPU
+kernels in ``repro.kernels`` (interpret-mode on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.api import constrain
+from ..layers.common import l2_normalize, lecun_init, split_rngs
+from ..layers.mlp import expert_init, experts_apply
+
+
+def soft_moe_init(rng, d_model: int, moe_cfg, style: str = "gated"):
+    r_phi, r_e = split_rngs(rng, 2)
+    n, p = moe_cfg.num_experts, moe_cfg.slots_per_expert
+    d_ff = moe_cfg.expert_d_ff
+    params = {
+        "phi": lecun_init(r_phi, (d_model, n, p), fan_in=d_model),
+        "scale": jnp.ones(()),
+        "experts": expert_init(r_e, n, d_model, d_ff, style),
+    }
+    if moe_cfg.num_shared_experts:
+        params["shared"] = expert_init(
+            jax.random.fold_in(r_e, 1), moe_cfg.num_shared_experts, d_model,
+            d_ff, style,
+        )
+    return params
+
+
+def soft_moe_weights(x, phi, scale, normalize: bool = True):
+    """Dispatch/combine weights for one sequence batch.
+
+    x: (b, m, d); phi: (d, n, p). Returns (d_weights, c_weights), both
+    (b, m, n, p): D normalized over m, C normalized over (n, p).
+    """
+    if normalize:
+        x = l2_normalize(x, axis=-1)
+        phi = scale * l2_normalize(phi, axis=0)
+    logits = jnp.einsum(
+        "bmd,dnp->bmnp", x.astype(jnp.float32), phi.astype(jnp.float32)
+    )
+    d_weights = jax.nn.softmax(logits, axis=1)  # over tokens (per slot)
+    b, m, n, p = logits.shape
+    c_weights = jax.nn.softmax(
+        logits.reshape(b, m, n * p), axis=-1
+    ).reshape(b, m, n, p)  # over all slots (per token)
+    return d_weights, c_weights
+
+
+def soft_moe_apply(params, moe_cfg, x, act: str = "silu",
+                   use_kernel: bool = False):
+    """x: (b, m, d) -> (b, m, d). Returns (y, metrics)."""
+    b, m, d = x.shape
+    n, p = moe_cfg.num_experts, moe_cfg.slots_per_expert
+    phi = params["phi"]
+    c_weights = None
+    if use_kernel:
+        from ..kernels import ops as kops
+
+        phi_n = kops.normalized_phi(phi, params["scale"])
+        slots = kops.soft_moe_dispatch(x, phi_n)  # (b, n·p, d)
+        slots = slots.reshape(b, n, p, d)
+    else:
+        d_w, c_weights = soft_moe_weights(x, phi, params["scale"])
+        # Distribution note: GSPMD's propagated layout (slot axis of the
+        # weight tensors sharded with Phi over `model`) is left alone.
+        # Forcing slot-replication here (gather the small axis early,
+        # avoid the combine all-reduce) was tried and REFUTED — it ADDED
+        # ~1.3s/step of resharding traffic at deepseek+soft:train_4k
+        # (EXPERIMENTS.md §Perf, H7).
+        # input slots: weighted average of all tokens per slot
+        slots = jnp.einsum("bmd,bmnp->bnpd", x.astype(jnp.float32), d_w)
+    slots = slots.astype(x.dtype)
+
+    # expert compute: (b,n,p,d) -> (n, b*p, d) so the expert axis leads
+    # (sharded over `model` = expert parallelism)
+    ys = slots.transpose(1, 0, 2, 3).reshape(n, b * p, d)
+    ys = experts_apply(params["experts"], ys, act)
+    ys = ys.reshape(n, b, p, d).transpose(1, 0, 2, 3)  # (b,n,p,d)
+
+    if use_kernel:
+        from ..kernels import ops as kops
+
+        y = kops.soft_moe_combine(x, phi_n, ys.reshape(b, n * p, d))
+    else:
+        y = jnp.einsum(
+            "bnpd,bmnp->bmd", ys.astype(jnp.float32), c_weights
+        )
+    y = y.astype(x.dtype)
+
+    if moe_cfg.num_shared_experts:
+        sh = experts_apply(
+            params["shared"],
+            jnp.broadcast_to(
+                x[None].reshape(1, b * m, d),
+                (moe_cfg.num_shared_experts, b * m, d),
+            ),
+            act,
+        )
+        y = y + sh.sum(0).reshape(b, m, d)
+
+    metrics = {
+        "moe_aux_loss": jnp.zeros((), jnp.float32),  # balanced by construction
+    }
+    if c_weights is not None:
+        # model-inspection stat (paper §5 / App. E): max combine weight —
+        # values approaching 1.0 signal the softmax collapse the L2-norm
+        # fix prevents.
+        metrics["max_combine"] = jax.lax.stop_gradient(c_weights.max())
+    return y, metrics

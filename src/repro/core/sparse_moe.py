@@ -1,0 +1,180 @@
+"""Sparse MoE baselines the paper compares against (§3.2):
+
+  * Tokens Choice — top-K router (Shazeer et al. 2017) with optional Batch
+    Priority Routing (Riquelme et al. 2021) and capacity buffers.
+  * Experts Choice — top-C tokens per expert (Zhou et al. 2022).
+
+Both use scatter/gather buffers of shape (experts, capacity, d) — never the
+(tokens × experts × capacity) one-hot tensor — so memory stays linear.
+These are also the *native* routers of the assigned MoE archs
+(deepseek-v2-lite: top-6 of 64; granite: top-8 of 32), with capacity
+buffers sized by `capacity_factor`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..layers.common import lecun_init, split_rngs
+from ..layers.mlp import expert_init, experts_apply
+
+
+def sparse_moe_init(rng, d_model: int, moe_cfg, style: str = "gated"):
+    r_r, r_e = split_rngs(rng, 2)
+    d_ff = moe_cfg.expert_d_ff
+    params = {
+        "router": lecun_init(r_r, (d_model, moe_cfg.num_experts), fan_in=d_model),
+        "experts": expert_init(r_e, moe_cfg.num_experts, d_model, d_ff, style),
+    }
+    if moe_cfg.num_shared_experts:
+        params["shared"] = expert_init(
+            jax.random.fold_in(r_e, 1), moe_cfg.num_shared_experts, d_model,
+            d_ff, style,
+        )
+    return params
+
+
+def _router_logits(params, x):
+    return jnp.einsum(
+        "gtd,de->gte", x.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+
+
+def _aux_losses(logits, probs, expert_index, num_experts, moe_cfg):
+    """Switch-style load-balance loss + router z-loss."""
+    # fraction of tokens routed (first choice) to each expert
+    onehot = jax.nn.one_hot(expert_index[..., 0], num_experts)
+    frac_tokens = onehot.mean(axis=(0, 1))
+    frac_probs = probs.mean(axis=(0, 1))
+    balance = num_experts * jnp.sum(frac_tokens * frac_probs)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return (
+        moe_cfg.aux_loss_weight * balance
+        + moe_cfg.router_z_loss_weight * z
+    )
+
+
+def tokens_choice_apply(params, moe_cfg, x, act: str = "silu"):
+    """Top-K token-choice routing. x: (b, m, d). Groups of `group_size`
+    sequences route together (paper §3.5: tokens in a group compete for
+    expert buffer slots — the source of batch effects Soft MoE avoids)."""
+    b, m, d = x.shape
+    gs = max(1, min(moe_cfg.group_size, b))
+    g = b // gs
+    xg = x.reshape(g, gs * m, d)
+    t = gs * m  # tokens per group
+    e, k = moe_cfg.num_experts, moe_cfg.top_k
+
+    logits = _router_logits(params, xg)  # (g,t,e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_index = jax.lax.top_k(probs, k)  # (g,t,k)
+
+    capacity = int(moe_cfg.capacity_factor * k * t / e)
+    capacity = max(capacity, 1)
+
+    # Priority order over tokens: BPR sorts by max router prob (descending);
+    # otherwise positional order. The ORDER is discrete — stop_gradient
+    # keeps autodiff from differentiating the sort keys (whose transpose
+    # rule lowers to a batched gather this jax build cannot lower).
+    if moe_cfg.bpr:
+        priority = jnp.argsort(
+            jax.lax.stop_gradient(-gate[..., 0]), axis=-1
+        )  # (g,t)
+    else:
+        priority = jnp.broadcast_to(jnp.arange(t), (g, t))
+    inv = jnp.argsort(priority, axis=-1)  # rank of each token
+
+    # Position of each (token, choice) within its expert buffer, counted in
+    # priority order; choices beyond capacity are dropped.
+    sorted_idx = jnp.take_along_axis(
+        expert_index, priority[..., None], axis=1
+    )  # (g,t,k) expert ids in priority order
+    flat_choice = jax.nn.one_hot(sorted_idx, e, dtype=jnp.int32)  # (g,t,k,e)
+    # order choices within a token by k; cumulative count per expert
+    cts = flat_choice.reshape(g, t * k, e)
+    pos_sorted = jnp.cumsum(cts, axis=1) - cts  # (g, t*k, e)
+    pos_sorted = (pos_sorted * cts).sum(-1).reshape(g, t, k)
+    # un-sort back to token order
+    pos = jnp.take_along_axis(pos_sorted, inv[..., None], axis=1)
+    keep = pos < capacity  # (g,t,k)
+
+    gate = gate * keep
+    # normalize kept gates (standard top-k renorm)
+    denom = jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+    gate_n = gate / denom
+
+    # scatter tokens into (e, capacity, d) buffers per group
+    def route_group(xg_g, eidx, posg, keepg, gateg):
+        buf = jnp.zeros((e, capacity, d), xg_g.dtype)
+        tok_rep = jnp.repeat(jnp.arange(t), k)
+        ef = eidx.reshape(-1)
+        pf = jnp.where(keepg.reshape(-1), posg.reshape(-1), capacity)
+        buf = buf.at[ef, jnp.clip(pf, 0, capacity - 1)].add(
+            jnp.where(keepg.reshape(-1)[:, None], xg_g[tok_rep], 0.0)
+        )
+        out = experts_apply(params["experts"], buf, act)  # (e,cap,d)
+        y = out[ef, jnp.clip(pf, 0, capacity - 1)]  # (t*k, d)
+        y = jnp.where(keepg.reshape(-1)[:, None], y, 0.0)
+        y = (y.reshape(t, k, d) * gateg[..., None]).sum(1)
+        return y
+
+    y = jax.vmap(route_group)(xg, expert_index, pos, keep, gate_n)
+    y = y.reshape(b, m, d).astype(x.dtype)
+
+    if moe_cfg.num_shared_experts:
+        sh = experts_apply(
+            params["shared"],
+            jnp.broadcast_to(
+                x.reshape(1, b * m, d),
+                (moe_cfg.num_shared_experts, b * m, d),
+            ),
+            act,
+        )
+        y = y + sh.sum(0).reshape(b, m, d).astype(x.dtype)
+
+    aux = _aux_losses(logits, probs, expert_index, e, moe_cfg)
+    dropped = 1.0 - keep.any(axis=-1).mean()  # fully-dropped token fraction
+    metrics = {"moe_aux_loss": aux, "dropped_fraction": dropped}
+    return y, metrics
+
+
+def experts_choice_apply(params, moe_cfg, x, act: str = "silu"):
+    """Experts-Choice routing: each expert takes its top-C tokens."""
+    b, m, d = x.shape
+    gs = max(1, min(moe_cfg.group_size, b))
+    g = b // gs
+    xg = x.reshape(g, gs * m, d)
+    t = gs * m
+    e = moe_cfg.num_experts
+
+    logits = _router_logits(params, xg)  # (g,t,e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    capacity = max(int(moe_cfg.capacity_factor * t / e), 1)
+
+    # per expert: top-capacity tokens
+    scores = probs.transpose(0, 2, 1)  # (g,e,t)
+    gsc, tidx = jax.lax.top_k(scores, capacity)  # (g,e,cap)
+
+    def route_group(xg_g, tidx_g, gsc_g):
+        gathered = xg_g[tidx_g.reshape(-1)].reshape(e, capacity, d)
+        out = experts_apply(params["experts"], gathered, act)
+        out = out * gsc_g[..., None].astype(out.dtype)
+        y = jnp.zeros((t, d), out.dtype)
+        y = y.at[tidx_g.reshape(-1)].add(out.reshape(e * capacity, d))
+        return y
+
+    y = jax.vmap(route_group)(xg, tidx, gsc)
+    y = y.reshape(b, m, d).astype(x.dtype)
+
+    aux = moe_cfg.router_z_loss_weight * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1))
+    )
+    # dropped = tokens selected by no expert (paper App. B)
+    selected = jnp.zeros((g, t), bool).at[
+        jnp.arange(g)[:, None, None], tidx
+    ].set(True)
+    metrics = {
+        "moe_aux_loss": aux,
+        "dropped_fraction": 1.0 - selected.mean(),
+    }
+    return y, metrics

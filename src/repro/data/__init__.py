@@ -1,0 +1,1 @@
+from .pipeline import SyntheticImages, SyntheticLM, SyntheticSeq2Seq  # noqa: F401

@@ -1,0 +1,15 @@
+from .api import (  # noqa: F401
+    constrain,
+    current_mesh,
+    logical_to_physical,
+    set_mesh,
+    spec,
+    use_mesh,
+)
+from .sharding import (  # noqa: F401
+    ShardingOptions,
+    abstract_params,
+    batch_sharding,
+    param_specs,
+    tree_shardings,
+)

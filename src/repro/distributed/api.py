@@ -1,0 +1,131 @@
+"""Mesh context + activation sharding constraints.
+
+Models call ``constrain(x, "batch", None, "model")`` with *logical* axis
+names; the mapping to physical mesh axes lives here, so the same model code
+runs on the single-pod (data, model) mesh, the multi-pod (pod, data, model)
+mesh, or unsharded on one CPU device (constraints become no-ops).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _state.mesh = mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def set_batch_over_model(flag: bool) -> None:
+    """Pure-DP mode: the logical `batch` axis also spans `model` (tensor
+    parallelism off). Used by the perf hillclimb for small models whose
+    TP collectives dominate; must match the ShardingOptions used for
+    params/inputs or GSPMD will reshard."""
+    _state.batch_over_model = flag
+
+
+def batch_over_model() -> bool:
+    return getattr(_state, "batch_over_model", False)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], *, dp_over_model: bool = False):
+    prev = current_mesh()
+    prev_bom = batch_over_model()
+    set_mesh(mesh)
+    set_batch_over_model(dp_over_model)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        set_mesh(prev)
+        set_batch_over_model(prev_bom)
+
+
+def logical_to_physical(mesh: Mesh, name: Optional[str]):
+    """Logical activation/param axis -> physical mesh axes."""
+    if name is None:
+        return None
+    axes = mesh.axis_names
+    if name == "batch":  # data parallel axes (pod x data when multi-pod)
+        ba = ("pod", "data") if "pod" in axes else ("data",)
+        if batch_over_model():
+            ba = ba + ("model",)
+        return ba if len(ba) > 1 else ba[0]
+    if name == "data":
+        return "data"
+    if name in ("model", "expert"):  # tensor/expert parallel
+        # pure-DP mode: `model` belongs to the batch axes; TP/EP constraints
+        # degrade to replicated.
+        return None if batch_over_model() else "model"
+    if name == "seq":
+        # Megatron-style sequence parallelism: the residual stream between
+        # layers is sharded over `model` on its sequence axis, so the
+        # rematted per-layer activation stash divides by the model axis
+        # (an 80-layer 72B stash is 86GB/device replicated, 5.4GB sharded).
+        # GSPMD all-gathers at each attention/MLP entry and
+        # reduce-scatters after — the AG+RS pair costs what the plain TP
+        # all-reduce did. Disabled in pure-DP mode (`model` is then part
+        # of the batch axes).
+        return None if batch_over_model() else "model"
+    raise ValueError(f"unknown logical axis {name!r}")
+
+
+def spec(*names) -> P:
+    """PartitionSpec from logical names, resolved on the current mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return P()
+    return P(*(logical_to_physical(mesh, n) for n in names))
+
+
+def constrain(x, *names):
+    """with_sharding_constraint by logical names; no-op without a mesh.
+    Axes whose dimension is not divisible by their mesh-axis size are
+    dropped (e.g. the 196-token ViT sequence on a 16-way model axis)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    fixed = []
+    for ax, name in enumerate(names):
+        if name is None:
+            fixed.append(None)
+            continue
+        phys = logical_to_physical(mesh, name)
+        if phys is None:  # e.g. "seq" disabled in pure-DP mode
+            fixed.append(None)
+            continue
+        size = (
+            mesh.shape[phys]
+            if isinstance(phys, str)
+            else _prod(mesh.shape[a] for a in phys)
+        )
+        fixed.append(phys if x.shape[ax] % size == 0 else None)
+    s = NamedSharding(mesh, P(*fixed))
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def _prod(it):
+    n = 1
+    for v in it:
+        n *= v
+    return n
+
+
+def num_slices(axis: str = "data") -> int:
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    return mesh.shape.get(axis, 1)

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the Soft-MoE hot path (dispatch/combine) with
+pure-jnp oracles in ref.py; see soft_moe_kernels.py for the tiling story."""
+from . import ops, ref  # noqa: F401
+from .soft_moe_kernels import combine_pallas, dispatch_pallas  # noqa: F401

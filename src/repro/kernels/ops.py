@@ -1,0 +1,81 @@
+"""Jitted wrappers for the Soft-MoE kernels.
+
+Forward runs the fused Pallas kernels (interpret=True on CPU — TPU is the
+target); backward is a custom_vjp built from the ref.py math (jax.vjp of
+the oracle), so training through the kernels is exact w.r.t. Algorithm 1+2.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .soft_moe_kernels import combine_pallas, dispatch_pallas
+
+# CPU container: interpret mode. On TPU this flag flips to False.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+# -- dispatch ---------------------------------------------------------------
+
+
+@jax.custom_vjp
+def soft_moe_dispatch(x, phi_n):
+    """x: (b, m, d); phi_n: (d, S) pre-normalized -> slots (b, S, d)."""
+    return jax.vmap(lambda xs: dispatch_pallas(xs, phi_n,
+                                               interpret=INTERPRET))(x)
+
+
+def _dispatch_fwd(x, phi_n):
+    return soft_moe_dispatch(x, phi_n), (x, phi_n)
+
+
+def _dispatch_bwd(res, g):
+    x, phi_n = res
+    _, vjp = jax.vjp(lambda xx, pp: jax.vmap(
+        lambda xs: ref.dispatch_ref(xs, pp))(xx), x, phi_n)
+    return vjp(g)
+
+
+soft_moe_dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+# -- combine ----------------------------------------------------------------
+
+
+@jax.custom_vjp
+def soft_moe_combine(x, phi_n, ys):
+    """x: (b, m, d); phi_n: (d, S); ys: (b, S, d) -> y (b, m, d)."""
+    return jax.vmap(
+        lambda xs, yss: combine_pallas(xs, phi_n, yss, interpret=INTERPRET)
+    )(x, ys)
+
+
+def _combine_fwd(x, phi_n, ys):
+    return soft_moe_combine(x, phi_n, ys), (x, phi_n, ys)
+
+
+def _combine_bwd(res, g):
+    x, phi_n, ys = res
+    _, vjp = jax.vjp(
+        lambda xx, pp, yy: jax.vmap(
+            lambda xs, yss: ref.combine_ref(xs, pp, yss)
+        )(xx, yy),
+        x, phi_n, ys,
+    )
+    return vjp(g)
+
+
+soft_moe_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+# -- full layer helper (used by core.soft_moe) -------------------------------
+
+
+def normalized_phi(phi, scale):
+    """phi: (d, n, p) -> (d, n*p) pre-normalized (O(d·S), done outside the
+    kernels — X normalization stays inside since X is re-read per pass)."""
+    d = phi.shape[0]
+    return ref.normalized_phi(phi.reshape(d, -1), scale)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the Soft-MoE kernels — the paper's Algorithm 1 + 2,
+verbatim semantics, single sequence (batch handled by vmap in ops.py).
+
+This is the reference the Pallas kernels are allclose-checked against, and
+also the backward-pass implementation for the custom_vjp wrappers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l2_normalize(x, axis, eps: float = 1e-6):
+    norm = jnp.sqrt(jnp.square(x).sum(axis=axis, keepdims=True))
+    return x * jnp.reciprocal(norm + eps)
+
+
+def normalized_phi(phi, scale):
+    """scale * l2norm(Phi) over d (axis 0). phi: (d, S)."""
+    return scale * l2_normalize(phi, axis=0)
+
+
+def logits_ref(x, phi_n):
+    """x: (m, d) raw tokens; phi_n: (d, S) pre-normalized slot params."""
+    xn = l2_normalize(x.astype(jnp.float32), axis=1)
+    return xn @ phi_n.astype(jnp.float32)  # (m, S)
+
+
+def dispatch_ref(x, phi_n):
+    """Returns slots (S, d): X~ = D^T X with D = softmax over tokens."""
+    logits = logits_ref(x, phi_n)
+    d_w = jax.nn.softmax(logits, axis=0)  # per-slot over tokens
+    return (d_w.T @ x.astype(jnp.float32)).astype(x.dtype)
+
+
+def combine_ref(x, phi_n, ys):
+    """Returns y (m, d): Y = C Ys with C = softmax over slots.
+    ys: (S, d) expert outputs."""
+    logits = logits_ref(x, phi_n)
+    c_w = jax.nn.softmax(logits, axis=1)  # per-token over slots
+    return (c_w @ ys.astype(jnp.float32)).astype(x.dtype)
+
+
+def soft_moe_ref(x, phi, scale, expert_fn):
+    """Full layer oracle (paper Algorithm 1 with Algorithm 2 norm)."""
+    phi_n = normalized_phi(phi, scale)
+    slots = dispatch_ref(x, phi_n)
+    ys = expert_fn(slots)
+    return combine_ref(x, phi_n, ys)

@@ -1,0 +1,191 @@
+"""Fused Soft-MoE dispatch/combine Pallas TPU kernels.
+
+Why a kernel: the jnp path materializes the (m × S) logits in HBM *twice*
+(once per softmax direction) plus the two weight tensors — at B/16 scale
+(m=4096 tokens, S=4096 slots) that is 4 × 64MB of HBM traffic per layer
+per sequence that never needs to exist. Both kernels below stream over the
+contraction dimension with an online softmax (the flash-attention
+rescaling trick applied to the paper's two softmax directions) and keep
+only (block × d) tiles resident in VMEM:
+
+  * dispatch: for each slot block, stream token blocks; online-softmax
+    over TOKENS (the D direction) while accumulating the slot mix
+    X~ = D^T X in the same pass. Logits never touch HBM.
+  * combine: for each token block, stream slot blocks; online-softmax
+    over SLOTS (the C direction) while accumulating Y = C Ys.
+
+Tiling: d stays whole inside a block (the dot needs full rows); token and
+slot tiles default to 128 — minor dims are multiples of 128 for MXU
+alignment. VMEM at d=8192, bt=bs=128, f32 accumulators:
+x-tile 4MB + phi-tile 4MB + acc 4MB + O(128) vectors ≈ 12MB < 16MB/core.
+
+Phi arrives pre-normalized (scale * l2norm(phi) is O(d·S), done once
+outside); X is l2-normalized inside the kernel (it is re-read every pass —
+normalizing outside would double-read X from HBM).
+
+Validated in interpret mode against ref.py (CPU has no MXU; TPU is the
+target). Backward = custom_vjp with the ref-math VJP (kernels are
+forward-optimized; the bwd einsums are already MXU-friendly XLA).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _l2n(x, eps=1e-6):
+    norm = jnp.sqrt(jnp.sum(jnp.square(x), axis=1, keepdims=True))
+    return x * (1.0 / (norm + eps))
+
+
+# ---------------------------------------------------------------------------
+# dispatch: slots = D^T X, D = softmax over tokens
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_kernel(x_ref, phi_ref, out_ref, acc, mx, den, *, m_valid, bt):
+    jt = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(jt == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        mx[...] = jnp.full_like(mx, _NEG)
+        den[...] = jnp.zeros_like(den)
+
+    x = x_ref[...].astype(jnp.float32)  # (bt, d) raw
+    xn = _l2n(x)
+    phi = phi_ref[...].astype(jnp.float32)  # (d, bs)
+    logits = jax.lax.dot_general(
+        xn, phi, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bt, bs)
+    # mask padded token rows (last block may be ragged)
+    row = jt * bt + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+    logits = jnp.where(row < m_valid, logits, _NEG)
+
+    m_old = mx[...]
+    m_new = jnp.maximum(m_old, logits.max(axis=0))  # (bs,)
+    corr = jnp.exp(m_old - m_new)
+    p = jnp.exp(logits - m_new[None, :])  # (bt, bs)
+    den[...] = den[...] * corr + p.sum(axis=0)
+    # acc: (bs, d) += p^T @ x   (raw x — the paper mixes unnormalized tokens)
+    acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
+        p, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    mx[...] = m_new
+
+    @pl.when(jt == nt - 1)
+    def _finish():
+        out_ref[...] = (acc[...] / den[...][:, None]).astype(out_ref.dtype)
+
+
+def dispatch_pallas(x, phi_n, *, bt: int = 128, bs: int = 128,
+                    interpret: bool = True):
+    """x: (m, d); phi_n: (d, S) pre-normalized. Returns slots (S, d)."""
+    m, d = x.shape
+    s = phi_n.shape[1]
+    m_pad = pl.cdiv(m, bt) * bt
+    s_pad = pl.cdiv(s, bs) * bs
+    if m_pad != m:
+        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+    if s_pad != s:
+        phi_n = jnp.pad(phi_n, ((0, 0), (0, s_pad - s)))
+    grid = (s_pad // bs, m_pad // bt)
+    out = pl.pallas_call(
+        functools.partial(_dispatch_kernel, m_valid=m, bt=bt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda js, jt: (jt, 0)),
+            pl.BlockSpec((d, bs), lambda js, jt: (0, js)),
+        ],
+        out_specs=pl.BlockSpec((bs, d), lambda js, jt: (js, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_pad, d), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bs, d), jnp.float32),  # acc: slot mix
+            pltpu.VMEM((bs,), jnp.float32),  # running max
+            pltpu.VMEM((bs,), jnp.float32),  # running denom
+        ],
+        interpret=interpret,
+    )(x, phi_n)
+    return out[:s]
+
+
+# ---------------------------------------------------------------------------
+# combine: y = C Ys, C = softmax over slots
+# ---------------------------------------------------------------------------
+
+
+def _combine_kernel(x_ref, phi_ref, ys_ref, out_ref, acc, mx, den,
+                    *, s_valid, bs):
+    js = pl.program_id(1)
+    ns = pl.num_programs(1)
+
+    @pl.when(js == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        mx[...] = jnp.full_like(mx, _NEG)
+        den[...] = jnp.zeros_like(den)
+
+    xn = _l2n(x_ref[...].astype(jnp.float32))  # (bt, d)
+    phi = phi_ref[...].astype(jnp.float32)  # (d, bs)
+    ys = ys_ref[...].astype(jnp.float32)  # (bs, d)
+    logits = jax.lax.dot_general(
+        xn, phi, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bt, bs)
+    col = js * bs + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = jnp.where(col < s_valid, logits, _NEG)
+
+    m_old = mx[...]
+    m_new = jnp.maximum(m_old, logits.max(axis=1))  # (bt,)
+    corr = jnp.exp(m_old - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+    den[...] = den[...] * corr + p.sum(axis=1)
+    acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
+        p, ys, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    mx[...] = m_new
+
+    @pl.when(js == ns - 1)
+    def _finish():
+        out_ref[...] = (acc[...] / den[...][:, None]).astype(out_ref.dtype)
+
+
+def combine_pallas(x, phi_n, ys, *, bt: int = 128, bs: int = 128,
+                   interpret: bool = True):
+    """x: (m, d); phi_n: (d, S); ys: (S, d) expert outputs -> y (m, d)."""
+    m, d = x.shape
+    s = phi_n.shape[1]
+    m_pad = pl.cdiv(m, bt) * bt
+    s_pad = pl.cdiv(s, bs) * bs
+    if m_pad != m:
+        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+    if s_pad != s:
+        phi_n = jnp.pad(phi_n, ((0, 0), (0, s_pad - s)))
+        ys = jnp.pad(ys, ((0, s_pad - s), (0, 0)))
+    grid = (m_pad // bt, s_pad // bs)
+    out = pl.pallas_call(
+        functools.partial(_combine_kernel, s_valid=s, bs=bs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda jt, js: (jt, 0)),
+            pl.BlockSpec((d, bs), lambda jt, js: (0, js)),
+            pl.BlockSpec((bs, d), lambda jt, js: (js, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda jt, js: (jt, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, d), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bt, d), jnp.float32),  # acc: combined output
+            pltpu.VMEM((bt,), jnp.float32),  # running max
+            pltpu.VMEM((bt,), jnp.float32),  # running denom
+        ],
+        interpret=interpret,
+    )(x, phi_n, ys)
+    return out[:m]

@@ -1,0 +1,100 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+"""Perf hillclimb driver (§Perf methodology): run a named list of
+(cell × sharding-variant) combinations, appending tagged results to
+results/perf_iterations.jsonl. Each variant encodes one hypothesis from
+EXPERIMENTS.md §Perf; the roofline deltas are the measurements.
+"""
+import json
+import sys
+import traceback
+
+from ..distributed.sharding import ShardingOptions
+from .dryrun import run_cell
+
+# (tag, arch, shape, kwargs)
+VARIANTS = [
+    # --- cell 1: mamba2-370m:train_4k (worst roofline fraction 0.046) ----
+    # H1: 370M params can't feed a 16-wide TP axis; make the model axis
+    # extra data parallelism (pure DP) — grad all-reduce ~3GB vs compute
+    # 72ms => compute-bound.
+    ("mamba2_base", "mamba2-370m", "train_4k", {}),
+    ("mamba2_pure_dp", "mamba2-370m", "train_4k",
+     {"opts": ShardingOptions(tensor_parallel=False, expert_parallel=False),
+      "dp_over_model": True}),
+    # H2: + ZeRO-1 (grads reduce-scatter + one param gather, no per-layer
+    # FSDP gathers)
+    ("mamba2_pure_dp_zero1", "mamba2-370m", "train_4k",
+     {"opts": ShardingOptions(tensor_parallel=False, expert_parallel=False),
+      "dp_over_model": True, "zero1": True}),
+    # --- cell 2: qwen2-72b:train_4k (flagship; collective-bound 0.685) ---
+    # H3: FSDP re-gathers every layer every pass (~914GB/step); ZeRO-1
+    # replaces that with one grad RS + one param AG per step.
+    ("qwen72b_base", "qwen2-72b", "train_4k", {}),
+    ("qwen72b_zero1", "qwen2-72b", "train_4k", {"zero1": True}),
+    # H4: microbatching with ZeRO-1 (activation collectives shrink per
+    # microbatch; params gathered once regardless).
+    ("qwen72b_zero1_mb4", "qwen2-72b", "train_4k",
+     {"zero1": True, "microbatches": 4}),
+    # --- cell 3: deepseek-v2-lite:train_4k (0.019; paper-representative
+    # MoE routing) -----------------------------------------------------
+    # H5: scatter/gather token routing under expert-parallelism makes
+    # GSPMD all-gather the routed buffers per layer per pass (~791GB).
+    # With experts replicated (EP off; FSDP shards their 1.1GB/layer),
+    # routing is device-local.
+    ("deepseek_base", "deepseek-v2-lite-16b", "train_4k", {}),
+    ("deepseek_no_ep", "deepseek-v2-lite-16b", "train_4k",
+     {"opts": ShardingOptions(expert_parallel=False)}),
+    ("deepseek_no_ep_zero1", "deepseek-v2-lite-16b", "train_4k",
+     {"opts": ShardingOptions(expert_parallel=False), "zero1": True}),
+    # H6: the paper's router at the same station — Soft MoE has no
+    # scatter/top-k at all; dispatch/combine are dense einsums that
+    # shard cleanly (slots over model).
+    ("deepseek_soft_base", "deepseek-v2-lite-16b+soft", "train_4k", {}),
+    # H7: pin the Soft-MoE weight/slot tensors slot-replicated (gather
+    # the small axis) instead of GSPMD's output all-reduce; see
+    # core/soft_moe.py distribution note. Runs with EP on.
+    ("deepseek_soft_slotrep", "deepseek-v2-lite-16b+soft", "train_4k", {}),
+    ("deepseek_soft_slotrep_zero1", "deepseek-v2-lite-16b+soft", "train_4k",
+     {"zero1": True}),
+    ("deepseek_soft_no_ep_zero1", "deepseek-v2-lite-16b+soft", "train_4k",
+     {"opts": ShardingOptions(expert_parallel=False), "zero1": True}),
+    # qwen2-0.5b (prefill was 0.505; train 0.263): pure DP like mamba2
+    ("qwen05b_pure_dp_zero1", "qwen2-0.5b", "train_4k",
+     {"opts": ShardingOptions(tensor_parallel=False, expert_parallel=False),
+      "dp_over_model": True, "zero1": True}),
+]
+
+
+def main():
+    names = sys.argv[1:] or [v[0] for v in VARIANTS]
+    out = "results/perf_iterations.jsonl"
+    done = set()
+    if os.path.exists(out):
+        for line in open(out):
+            try:
+                r = json.loads(line)
+                if r.get("status") == "ok":
+                    done.add(r.get("tag"))
+            except json.JSONDecodeError:
+                pass
+    for tag, arch, shape, kw in VARIANTS:
+        if tag not in names or tag in done:
+            continue
+        print(f"### {tag}")
+        try:
+            r = run_cell(arch, shape, **kw)
+        except Exception as e:
+            traceback.print_exc()
+            r = {"cell": f"{arch}:{shape}", "status": "error",
+                 "error": f"{type(e).__name__}: {e}"}
+        r["tag"] = tag
+        with open(out, "a") as f:
+            f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,282 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch × shape) cell —
+weak-type-correct, shardable, zero device allocation — plus the sharding
+pytrees the dry-run jits against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, ShapeConfig
+from ..distributed.sharding import ShardingOptions, tree_shardings
+from ..models import build_model, init_cache
+from ..models.encdec import init_encdec_cache
+from ..optim import OptimizerConfig
+from ..serve.engine import make_decode_step, make_prefill_step
+from ..train.step import init_train_state, make_train_step
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _batch_axes(mesh: Mesh):
+    from ..distributed.api import batch_over_model
+
+    ba = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if batch_over_model():
+        ba = ba + ("model",)
+    return ba
+
+
+def _batch_size_ok(mesh: Mesh, b: int) -> int:
+    n = 1
+    for a in _batch_axes(mesh):
+        n *= mesh.shape[a]
+    return b % n == 0
+
+
+def batch_specs(cfg, shape: ShapeConfig, mesh: Mesh) -> Dict[str, Any]:
+    """Training batch ShapeDtypeStructs for one arch."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.frontend.kind == "vision" and cfg.family == "vlm":
+        # frontend stub embeds occupy part of the sequence budget
+        n = cfg.frontend.num_embeds
+        out["tokens"] = _sds((b, s - n), jnp.int32)
+        out["embeds"] = _sds((b, n, cfg.frontend.embed_dim), jnp.bfloat16)
+    elif cfg.encoder_layers > 0:
+        out["tokens"] = _sds((b, s), jnp.int32)
+        out["embeds"] = _sds(
+            (b, cfg.frontend.num_embeds, cfg.frontend.embed_dim), jnp.bfloat16
+        )
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32)
+    return out
+
+
+def _ba_for(mesh: Mesh, dim: int):
+    """Batch axes, dropped when the batch dim is not divisible (e.g. the
+    long_500k shape has global_batch=1: replicate instead)."""
+    ba = _batch_axes(mesh)
+    n = 1
+    for a in ba:
+        n *= mesh.shape[a]
+    return ba if dim % n == 0 else None
+
+
+def batch_shardings(mesh: Mesh, batch):
+    def one(leaf):
+        return NamedSharding(
+            mesh, P(_ba_for(mesh, leaf.shape[0]), *(None,) * (leaf.ndim - 1))
+        )
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+# ---------------------------------------------------------------------------
+# cache shardings (serving cells)
+# ---------------------------------------------------------------------------
+
+
+def cache_shardings(mesh: Mesh, cache, cfg):
+    """KV caches: batch over (pod,data); kv-heads over model when divisible,
+    else the sequence dim over model (context parallelism — the 72B decode
+    cache at 32k × 128 batch does not fit per-chip otherwise)."""
+    model_size = mesh.shape["model"]
+
+    def one(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name == "pos":
+            return NamedSharding(mesh, P())
+        ba = _ba_for(mesh, leaf.shape[0])
+        if leaf.ndim == 4 and name in ("k", "v"):
+            b, s, g, hd = leaf.shape
+            if g % model_size == 0:
+                return NamedSharding(mesh, P(ba, None, "model", None))
+            if s % model_size == 0:
+                return NamedSharding(mesh, P(ba, "model", None, None))
+            return NamedSharding(mesh, P(ba, None, None, None))
+        if name in ("ckv", "krope"):  # (b, s, r)
+            b, s, r = leaf.shape
+            if s % model_size == 0:
+                return NamedSharding(mesh, P(ba, "model", None))
+            return NamedSharding(mesh, P(ba, None, None))
+        if name == "state":  # ssm (b, h, dh, n)
+            h = leaf.shape[1]
+            if h % model_size == 0:
+                return NamedSharding(mesh, P(ba, "model", None, None))
+            return NamedSharding(mesh, P(ba, None, None, None))
+        if name == "conv":  # (b, w-1, C)
+            return NamedSharding(mesh, P(ba, None, None))
+        return NamedSharding(mesh, P(ba, *(None,) * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# ---------------------------------------------------------------------------
+# cell builder
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything the dry-run needs to lower one (arch × shape × mesh)."""
+
+    name: str
+    fn: Any
+    args: tuple
+    in_shardings: tuple
+    donate: tuple = ()
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _bf16_params(params_abs):
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+        return x
+
+    return jax.tree_util.tree_map(cast, params_abs)
+
+
+def build_cell(cfg, shape_name: str, mesh: Mesh,
+               opts: ShardingOptions | None = None,
+               microbatches: int = 1,
+               use_kernel: bool = False,
+               zero1: bool = False) -> Cell:
+    shape = SHAPES[shape_name]
+    opts = opts or ShardingOptions()
+    init_fn, loss_fn, _ = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+
+    if shape.mode == "train":
+        state_abs = _abstract(
+            lambda r: init_train_state(r, init_fn, zero1=zero1), rng
+        )
+        batch_abs = batch_specs(cfg, shape, mesh)
+        from ..train.step import state_shardings as st_sh
+
+        state_sh = st_sh(mesh, state_abs, opts)
+        step = make_train_step(
+            lambda p, b: loss_fn(p, b), OptimizerConfig(),
+            microbatches=microbatches,
+        )
+        return Cell(
+            name=f"{cfg.name}:{shape_name}",
+            fn=step,
+            args=(state_abs, batch_abs),
+            in_shardings=(state_sh, batch_shardings(mesh, batch_abs)),
+            donate=(0,),
+        )
+
+    # serving cells: bf16 params, no optimizer state. FSDP is a training
+    # layout — at decode it would all-gather the full weights EVERY token
+    # (measured 17.5GB/step on qwen2-72b:decode_32k → roofline fraction
+    # 0.002); inference shards over `model` only and replicates over data.
+    opts = dataclasses.replace(opts, fsdp=False)
+    params_abs = _bf16_params(_abstract(init_fn, rng))
+    params_sh = tree_shardings(mesh, params_abs, opts)
+    b, s = shape.global_batch, shape.seq_len
+
+    if cfg.encoder_layers > 0:
+        from ..models.encdec import decode_step as ed_decode
+
+        cache_abs = _abstract(
+            lambda: init_encdec_cache(cfg, b, s)
+        )
+        enc_out_abs = _sds((b, cfg.frontend.num_embeds, cfg.d_model),
+                           jnp.bfloat16)
+        ba = _batch_axes(mesh)
+        enc_sh = NamedSharding(mesh, P(ba, None, None))
+        if shape.mode == "prefill":
+            # prefill = encode(frames) + decoder prefill, one step
+            from ..models.encdec import encdec_apply
+
+            toks = _sds((b, s), jnp.int32)
+            frames_abs = _sds(
+                (b, cfg.frontend.num_embeds, cfg.frontend.embed_dim),
+                jnp.bfloat16,
+            )
+
+            def fn(params, tokens, frames, cache):
+                import jax.numpy as jnp_
+
+                enc_out, enc_aux = __import__("repro.models.encdec",
+                                              fromlist=["encode"]).encode(
+                    params, cfg, frames)
+                logits, cache, _ = ed_decode(
+                    params, cfg, tokens, enc_out,
+                    positions=jnp_.arange(s), cache=cache, mode="prefill",
+                    last_only=True,
+                )
+                return logits, enc_out, cache
+
+            return Cell(
+                name=f"{cfg.name}:{shape_name}", fn=fn,
+                args=(params_abs, toks, frames_abs, cache_abs),
+                in_shardings=(
+                    params_sh, batch_shardings(mesh, toks),
+                    batch_shardings(mesh, frames_abs),
+                    _encdec_cache_sh(mesh, cache_abs, cfg),
+                ),
+                donate=(3,),
+            )
+        toks = _sds((b, 1), jnp.int32)
+        pos = _sds((), jnp.int32)
+
+        def fn(params, tokens, pos, enc_out, cache):
+            import jax.numpy as jnp_
+
+            logits, cache, _ = ed_decode(
+                params, cfg, tokens, enc_out,
+                positions=pos[None], cache=cache, mode="decode",
+            )
+            return logits, cache
+
+        return Cell(
+            name=f"{cfg.name}:{shape_name}", fn=fn,
+            args=(params_abs, toks, pos, enc_out_abs, cache_abs),
+            in_shardings=(
+                params_sh, batch_shardings(mesh, toks),
+                NamedSharding(mesh, P()), enc_sh,
+                _encdec_cache_sh(mesh, cache_abs, cfg),
+            ),
+            donate=(4,),
+        )
+
+    cache_abs = _abstract(lambda: init_cache(cfg, b, s))
+    cache_sh = cache_shardings(mesh, cache_abs, cfg)
+    if shape.mode == "prefill":
+        toks = _sds((b, s), jnp.int32)
+        fn = make_prefill_step(cfg, s)
+        return Cell(
+            name=f"{cfg.name}:{shape_name}", fn=fn,
+            args=(params_abs, toks, cache_abs),
+            in_shardings=(params_sh, batch_shardings(mesh, toks), cache_sh),
+            donate=(2,),
+        )
+    # decode
+    toks = _sds((b, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    fn = make_decode_step(cfg)
+    return Cell(
+        name=f"{cfg.name}:{shape_name}", fn=fn,
+        args=(params_abs, toks, pos, cache_abs),
+        in_shardings=(
+            params_sh, batch_shardings(mesh, toks),
+            NamedSharding(mesh, P()), cache_sh,
+        ),
+        donate=(3,),
+    )
+
+
+def _encdec_cache_sh(mesh, cache_abs, cfg):
+    return cache_shardings(mesh, cache_abs, cfg)

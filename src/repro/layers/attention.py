@@ -1,0 +1,318 @@
+"""Attention variants: GQA (optional QKV bias, sliding window) and MLA
+(DeepSeek-V2 multi-head latent attention with compressed KV cache).
+
+Three execution modes share one code path:
+  * train/eval: full sequence, no cache.
+  * prefill:    full sequence, cache written for subsequent decoding.
+  * decode:     q_len==1, attends over the cache (ring buffer for
+                sliding-window layers, absorbed-matmul form for MLA).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import lecun_init, split_rngs
+from .rotary import apply_rope
+
+NEG_INF = -2.0**30
+
+# Above this (Sq * Sk) product, attention switches to the flash-style
+# chunked path — never materializes (Sq, Sk) logits. At train_4k the dense
+# path would hold a (b, h, 4096, 4096) f32 logits tensor per device
+# (~15GB/dev for qwen2-0.5b, whose 14 heads can't shard over a 16-way
+# model axis); the chunked path keeps one (Sq, block) tile live instead.
+_CHUNKED_THRESHOLD = 2048 * 4096
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(rng, cfg):
+    a = cfg.attention
+    d = cfg.d_model
+    r_q, r_k, r_v, r_o = split_rngs(rng, 4)
+    p = {
+        "wq": lecun_init(r_q, (d, a.num_heads, a.head_dim), fan_in=d),
+        "wk": lecun_init(r_k, (d, a.num_kv_heads, a.head_dim), fan_in=d),
+        "wv": lecun_init(r_v, (d, a.num_kv_heads, a.head_dim), fan_in=d),
+        "wo": lecun_init(
+            r_o, (a.num_heads, a.head_dim, d), fan_in=a.num_heads * a.head_dim
+        ),
+    }
+    if a.qkv_bias:
+        p["bq"] = jnp.zeros((a.num_heads, a.head_dim))
+        p["bk"] = jnp.zeros((a.num_kv_heads, a.head_dim))
+        p["bv"] = jnp.zeros((a.num_kv_heads, a.head_dim))
+    return p
+
+
+def init_kv_cache(cfg, batch: int, length: int, is_global: bool,
+                  dtype=jnp.bfloat16):
+    """Cache for one layer. Sliding-window layers use a ring buffer of the
+    window size; global layers allocate the full length."""
+    a = cfg.attention
+    if a.sliding_window is not None and not is_global:
+        length = min(length, a.sliding_window)
+    if a.kind == "mla":
+        return {
+            "ckv": jnp.zeros((batch, length, a.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, length, a.qk_rope_head_dim), dtype),
+            "pos": jnp.full((length,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, length, a.num_kv_heads, a.head_dim), dtype),
+        "v": jnp.zeros((batch, length, a.num_kv_heads, a.head_dim), dtype),
+        "pos": jnp.full((length,), -1, jnp.int32),
+    }
+
+
+def _attend(q, k, v, mask, scale: Optional[float] = None):
+    """q: (B,Sq,H,Dk); k: (B,Sk,G,Dk); v: (B,Sk,G,Dv) grouped;
+    mask: (B,Sq,Sk) bool or None. Dv may differ from Dk (MLA latent)."""
+    b, sq, h, d = q.shape
+    g, dv = k.shape[2], v.shape[-1]
+    rep = h // g
+    scale = scale if scale is not None else 1.0 / float(d) ** 0.5
+    qg = q.reshape(b, sq, g, rep, d)
+    logits = scale * jnp.einsum(
+        "bsgrd,btgd->bgrst", qg.astype(jnp.float32), k.astype(jnp.float32)
+    )
+    if mask is not None:
+        # (B,Sq,Sk) -> (B,1,1,Sq,Sk) to broadcast over (g, rep).
+        logits = logits + jnp.where(mask[:, None, None], 0.0, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def _attend_chunked(q, k, v, qpos, kpos, causal: bool,
+                    window: Optional[int], scale: Optional[float] = None,
+                    is_global=True, block: int = 1024):
+    """Flash-style online-softmax attention, scanning KV in blocks — never
+    materializes the (Sq, Sk) logits or mask. Used when Sk is long (32k /
+    500k shapes); numerically identical to `_attend` (checked in tests)."""
+    b, sq, h, d = q.shape
+    sk, g, dv = k.shape[1], k.shape[2], v.shape[-1]
+    rep = h // g
+    scale = scale if scale is not None else 1.0 / float(d) ** 0.5
+    if sk % block != 0:
+        pad = (sk + block - 1) // block * block - sk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, pad),), constant_values=-1)
+        sk += pad
+    nb = sk // block
+    qg = q.astype(jnp.float32).reshape(b, sq, g, rep, d)
+    kb = k.astype(jnp.float32).reshape(b, nb, block, g, d).transpose(1, 0, 2, 3, 4)
+    vb = v.astype(jnp.float32).reshape(b, nb, block, g, dv).transpose(1, 0, 2, 3, 4)
+    kpb = kpos.reshape(nb, block)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, kp = inp
+        s = jnp.einsum("bsgrd,btgd->bgrst", qg, kblk) * scale
+        mask = make_mask(qpos, kp, causal, window, is_global)  # (sq, block)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum("bgrst,btgd->bgrsd", p, vblk)
+        return (m_new, l, acc), None
+
+    # Without this, autodiff of the scan stores the per-block probability
+    # tiles p — the full (Sq × Sk) memory the chunking exists to avoid.
+    # Checkpointing the body makes backward recompute p from (q, k-block):
+    # the flash-attention backward, expressed through remat.
+    body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable,
+        prevent_cse=False,
+    )
+
+    m0 = jnp.full((b, g, rep, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, g, rep, sq), jnp.float32)
+    a0 = jnp.zeros((b, g, rep, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, kpb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+def make_mask(q_positions, k_positions, causal: bool,
+              window: Optional[int], is_global=True):
+    """Boolean (B?,Sq,Sk) mask: True = attend. Positions may be (S,) or
+    (B,S); invalid cache entries carry position -1. `is_global` may be a
+    traced scalar bool (gemma3's local:global pattern scanned with shared
+    weights): global layers ignore the window."""
+    q = q_positions[..., :, None]
+    k = k_positions[..., None, :]
+    m = k >= 0
+    if causal:
+        m = m & (k <= q)
+    if window is not None:
+        m = m & ((k > q - window) | is_global)
+    return m
+
+
+def _ring_update(cache, new_vals: dict, positions):
+    """Write `new_vals[name]` (B,S,...) at ring slots positions % length."""
+    length = cache["pos"].shape[0]
+    slots = positions % length  # (S,)
+    out = dict(cache)
+    for name, val in new_vals.items():
+        out[name] = cache[name].at[:, slots].set(val.astype(cache[name].dtype))
+    out["pos"] = cache["pos"].at[slots].set(positions)
+    return out
+
+
+def gqa_apply(params, cfg, x, *, layer_is_global: bool = True,
+              positions=None, cache=None, mode: str = "train"):
+    """Returns (out, new_cache). positions: (S,) absolute token positions."""
+    a = cfg.attention
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dgk->bsgk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dgk->bsgk", x, params["wv"].astype(x.dtype))
+    if a.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = apply_rope(q, positions, a.rope_theta)
+    k = apply_rope(k, positions, a.rope_theta)
+
+    # `layer_is_global` may be traced (scanned local:global pattern), so
+    # the window is applied inside the mask rather than branched on here.
+    window = a.sliding_window
+
+    if cache is None:
+        k_all, v_all, kpos = k, v, positions
+    else:
+        cache = _ring_update(cache, {"k": k, "v": v}, positions)
+        if s > 1:
+            # Prefill: attend the input KV directly — the ring buffer may
+            # already have wrapped (window < prefill length), so the cache
+            # is only valid for *subsequent* decode steps.
+            k_all, v_all, kpos = k, v, positions
+        else:
+            k_all, v_all, kpos = cache["k"], cache["v"], cache["pos"]
+
+    # Flash-style path for long KV: never materializes (Sq, Sk) logits.
+    if k_all.shape[1] * max(s, 1) > _CHUNKED_THRESHOLD:
+        out = _attend_chunked(q, k_all, v_all, positions, kpos,
+                              cfg.causal, window, is_global=layer_is_global)
+    else:
+        mask = make_mask(positions, kpos, cfg.causal, window,
+                         layer_is_global)[None]
+        out = _attend(q, k_all, v_all, mask)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(rng, cfg):
+    a = cfg.attention
+    d = cfg.d_model
+    rs = split_rngs(rng, 6)
+    qk_head = a.qk_nope_head_dim + a.qk_rope_head_dim
+    return {
+        "wq": lecun_init(rs[0], (d, a.num_heads, qk_head), fan_in=d),
+        "w_dkv": lecun_init(rs[1], (d, a.kv_lora_rank), fan_in=d),
+        "w_krope": lecun_init(rs[2], (d, a.qk_rope_head_dim), fan_in=d),
+        "w_uk": lecun_init(
+            rs[3], (a.kv_lora_rank, a.num_heads, a.qk_nope_head_dim),
+            fan_in=a.kv_lora_rank,
+        ),
+        "w_uv": lecun_init(
+            rs[4], (a.kv_lora_rank, a.num_heads, a.v_head_dim),
+            fan_in=a.kv_lora_rank,
+        ),
+        "wo": lecun_init(
+            rs[5], (a.num_heads, a.v_head_dim, d),
+            fan_in=a.num_heads * a.v_head_dim,
+        ),
+    }
+
+
+def mla_apply(params, cfg, x, *, positions=None, cache=None,
+              mode: str = "train", layer_is_global: bool = True):
+    """MLA with compressed-KV cache. Decode uses the *absorbed* form:
+    q_nope is projected into the latent rank space so attention scores are
+    computed against the (B, S, rank) cache directly — no per-step
+    re-expansion of K (the production DeepSeek inference trick)."""
+    a = cfg.attention
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    q_nope = q[..., : a.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., a.qk_nope_head_dim:], positions, a.rope_theta)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(dt))
+    krope = apply_rope(
+        jnp.einsum("bsd,dk->bsk", x, params["w_krope"].astype(dt))[
+            :, :, None
+        ],
+        positions,
+        a.rope_theta,
+    )[:, :, 0]
+
+    scale = 1.0 / float(a.qk_nope_head_dim + a.qk_rope_head_dim) ** 0.5
+
+    if cache is not None:
+        cache = _ring_update(cache, {"ckv": ckv, "krope": krope}, positions)
+        if s > 1:  # prefill: attend input latents (see gqa_apply note)
+            ckv_all, krope_all, kpos = ckv, krope, positions
+        else:
+            ckv_all, krope_all = cache["ckv"], cache["krope"]
+            kpos = cache["pos"]
+    else:
+        ckv_all, krope_all, kpos = ckv, krope, positions
+
+    # Absorbed form: project q_nope into the latent rank space, then MLA is
+    # exactly MHA with a single shared KV "head" of dim (rank + rope_dim)
+    # for scores and dim rank for values — so it reuses the dense/flash
+    # attend paths (and the compressed cache is attended to directly).
+    q_lat = jnp.einsum(
+        "bshk,rhk->bshr", q_nope.astype(jnp.float32),
+        params["w_uk"].astype(jnp.float32),
+    ).astype(dt)
+    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)  # (b,s,h,r+rd)
+    k_cat = jnp.concatenate([ckv_all, krope_all], axis=-1)[:, :, None]
+    v_lat = ckv_all[:, :, None]  # (b,t,1,r)
+
+    if k_cat.shape[1] * max(s, 1) > _CHUNKED_THRESHOLD:
+        lat = _attend_chunked(q_cat, k_cat, v_lat, positions, kpos,
+                              cfg.causal, None, scale=scale)
+    else:
+        mask = make_mask(positions, kpos, cfg.causal, None)[None]
+        lat = _attend(q_cat, k_cat, v_lat, mask, scale=scale)
+
+    # Expand the weighted latent through W_uv once.
+    out = jnp.einsum(
+        "bshr,rhv->bshv", lat.astype(jnp.float32),
+        params["w_uv"].astype(jnp.float32),
+    )
+    out = jnp.einsum("bshv,hvd->bsd", out.astype(dt), params["wo"].astype(dt))
+    return out, cache
+
+
+def attention_init(rng, cfg):
+    return mla_init(rng, cfg) if cfg.attention.kind == "mla" else gqa_init(rng, cfg)
+
+
+def attention_apply(params, cfg, x, **kw):
+    if cfg.attention.kind == "mla":
+        return mla_apply(params, cfg, x, **kw)
+    return gqa_apply(params, cfg, x, **kw)

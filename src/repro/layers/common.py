@@ -1,0 +1,109 @@
+"""Shared layer plumbing: params are plain pytrees (nested dicts of jnp
+arrays); every layer exposes ``init(rng, cfg, ...) -> params`` and
+``apply(params, cfg, x, ...) -> y`` pure functions (no framework)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(rng, shape, stddev, dtype=jnp.float32):
+    return stddev * jax.random.truncated_normal(rng, -2.0, 2.0, shape, dtype)
+
+
+def lecun_init(rng, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return truncated_normal(rng, shape, (1.0 / max(fan_in, 1)) ** 0.5, dtype)
+
+
+def split_rngs(rng, n: int):
+    return list(jax.random.split(rng, n))
+
+
+def cast(x, dtype_str: str):
+    return x.astype(jnp.dtype(dtype_str))
+
+
+def compute_cast(params, dtype_str: str):
+    """Cast float params to the compute dtype (mixed precision)."""
+    dt = jnp.dtype(dtype_str)
+
+    def _c(p):
+        if jnp.issubdtype(p.dtype, jnp.floating):
+            return p.astype(dt)
+        return p
+
+    return jax.tree_util.tree_map(_c, params)
+
+
+# --- normalization ----------------------------------------------------------
+
+
+def norm_init(cfg, d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}
+    return {"scale": jnp.ones((d,))}
+
+
+def _mean_sq(x):
+    """Mean of squares with f32 ACCUMULATION but without materializing an
+    f32 copy of x (einsum with preferred_element_type). The obvious
+    x.astype(f32) materializes — and XLA-CPU hoists that convert out of
+    the reverse-scan loop, pinning an f32 copy of the whole per-layer
+    activation stash (10.7GB/device at qwen2-72b train_4k)."""
+    ms = jnp.einsum(
+        "...d,...d->...", x, x, preferred_element_type=jnp.float32
+    )
+    return ms[..., None] / x.shape[-1]
+
+
+def norm_apply(params, cfg, x, eps: float = 1e-6):
+    """Stats in f32, application in the compute dtype (bf16-safe)."""
+    dtype = x.dtype
+    if cfg.norm == "layernorm":
+        mu = (
+            jnp.einsum("...d->...", x, preferred_element_type=jnp.float32)[
+                ..., None
+            ]
+            / x.shape[-1]
+        )
+        xc = x - mu.astype(dtype)
+        var = _mean_sq(xc)
+        inv = jax.lax.rsqrt(var + eps).astype(dtype)
+        y = xc * inv
+        y = y * params["scale"].astype(dtype) + params["bias"].astype(dtype)
+    else:  # rmsnorm
+        ms = _mean_sq(x)
+        inv = jax.lax.rsqrt(ms + eps).astype(dtype)
+        y = x * inv * params["scale"].astype(dtype)
+    return y
+
+
+def l2_normalize(x, axis, eps: float = 1e-6):
+    """Paper Algorithm 2, verbatim semantics."""
+    norm = jnp.sqrt(jnp.sum(jnp.square(x), axis=axis, keepdims=True))
+    return x * jnp.reciprocal(norm + eps)
+
+
+# --- activations ------------------------------------------------------------
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[
+        name
+    ]
+
+
+# --- misc -------------------------------------------------------------------
+
+
+def stack_pytrees(trees: Sequence):
+    """Stack a list of identical-structure pytrees along a new axis 0
+    (layer-stacking for scan-over-layers)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m

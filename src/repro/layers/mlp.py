@@ -1,0 +1,63 @@
+"""Gated MLP (SwiGLU/GeGLU) — also the expert function used by every MoE
+variant (the paper's experts are MLPs)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .common import activation, lecun_init, split_rngs
+
+
+def mlp_init(rng, d_model: int, d_ff: int, style: str = "gated"):
+    r1, r2, r3 = split_rngs(rng, 3)
+    p = {
+        "w_up": lecun_init(r2, (d_model, d_ff), fan_in=d_model),
+        "w_down": lecun_init(r3, (d_ff, d_model), fan_in=d_ff),
+    }
+    if style == "gated":
+        p["w_gate"] = lecun_init(r1, (d_model, d_ff), fan_in=d_model)
+    return p
+
+
+def mlp_apply(params, x, act: str = "silu"):
+    dt = x.dtype
+    f = activation(act)
+    up = x @ params["w_up"].astype(dt)
+    if "w_gate" in params:  # SwiGLU
+        h = f(x @ params["w_gate"].astype(dt)) * up
+    else:  # classic fc1-act-fc2 (the paper's ViT MLP)
+        h = f(up)
+    return h @ params["w_down"].astype(dt)
+
+
+def expert_init(rng, num_experts: int, d_model: int, d_ff: int,
+                style: str = "gated"):
+    """Stacked expert params: leading axis = expert."""
+    assert d_ff > 0, (
+        "expert_d_ff resolved to 0 — zero-width experts. MoEConfig uses "
+        "0 as 'inherit model d_ff'; resolve before init (moe_init does)."
+    )
+    r1, r2, r3 = split_rngs(rng, 3)
+    p = {
+        "w_up": lecun_init(r2, (num_experts, d_model, d_ff), fan_in=d_model),
+        "w_down": lecun_init(r3, (num_experts, d_ff, d_model), fan_in=d_ff),
+    }
+    if style == "gated":
+        p["w_gate"] = lecun_init(
+            r1, (num_experts, d_model, d_ff), fan_in=d_model
+        )
+    return p
+
+
+def experts_apply(params, xs, act: str = "silu"):
+    """xs: (num_experts, slots_or_capacity, d) -> same shape.
+    One einsum per projection; expert axis stays leading so it shards over
+    the `model` mesh axis (expert parallelism)."""
+    dt = xs.dtype
+    f = activation(act)
+    up = jnp.einsum("esd,edf->esf", xs, params["w_up"].astype(dt))
+    if "w_gate" in params:
+        h = f(jnp.einsum("esd,edf->esf", xs,
+                         params["w_gate"].astype(dt))) * up
+    else:
+        h = f(up)
+    return jnp.einsum("esf,efd->esd", h, params["w_down"].astype(dt))

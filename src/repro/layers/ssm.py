@@ -1,0 +1,234 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked matmul form ("matrix transformer"): the
+sequence is split into chunks; intra-chunk terms are dense masked matmuls
+(MXU-friendly) and inter-chunk terms run one small recurrence over chunk
+states via lax.scan. Decode keeps a constant-size recurrent state
+(B, heads, head_dim, state) + a causal-conv ring state — this is what makes
+the long_500k shape sub-quadratic for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import lecun_init, split_rngs
+
+
+def ssm_init(rng, cfg):
+    """Separate projections per role (z/x/B/C/dt) rather than one packed
+    in_proj: each can then be sharded on a head/group-aligned axis for
+    tensor parallelism without shard boundaries straddling roles."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    conv_ch = di + 2 * s.ngroups * s.state_dim
+    rs = split_rngs(rng, 7)
+    return {
+        "w_z": lecun_init(rs[0], (d, di), fan_in=d),
+        "w_x": lecun_init(rs[1], (d, di), fan_in=d),
+        "w_B": lecun_init(rs[2], (d, s.ngroups * s.state_dim), fan_in=d),
+        "w_C": lecun_init(rs[3], (d, s.ngroups * s.state_dim), fan_in=d),
+        "w_dt": lecun_init(rs[4], (d, nh), fan_in=d),
+        "conv_w": lecun_init(rs[5], (s.conv_width, conv_ch), fan_in=s.conv_width),
+        "conv_b": jnp.zeros((conv_ch,)),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh)
+        ),  # A in [-16, -1]
+        "D": jnp.ones((nh,)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 1e-2) * 100.0)),
+        "norm_scale": jnp.ones((di,)),
+        "w_out": lecun_init(rs[6], (di, d), fan_in=di),
+    }
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv1d. xbc: (B,S,C). If conv_state (B,W-1,C) given,
+    prepend it (decode/prefill continuation); returns (out, new_state)."""
+    w = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (w - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)  # (B, S+W-1, C)
+    # depthwise conv as sum of shifted slices (W is tiny: 4)
+    s = xbc.shape[1]
+    out = sum(
+        full[:, i : i + s] * conv_w[i].astype(xbc.dtype) for i in range(w)
+    )
+    out = jax.nn.silu(out + conv_b.astype(xbc.dtype))
+    new_state = full[:, -(w - 1) :] if w > 1 else pad[:, :0]
+    return out, new_state
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{k in (j, i]} x[..., k]
+    (lower-triangular), -inf above the diagonal."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """SSD scan in chunked matmul form.
+
+    x: (b,s,h,dh); dt: (b,s,h) (post-softplus); A: (h,) negative;
+    B, C: (b,s,g,n). Returns (y: (b,s,h,dh), final_state: (b,h,dh,n)).
+    """
+    b, s, h, dh = x.shape
+    g, n = B.shape[2], B.shape[3]
+    orig_s = s
+    if s % chunk != 0:
+        # Pad with dt=0 tokens: decay exp(0)=1 and contribution dt·B·x=0,
+        # so padding is exact (state and outputs unaffected).
+        pad = (s + chunk - 1) // chunk * chunk - s
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s += pad
+    nc = s // chunk
+    hpg = h // g  # heads per B/C group
+
+    f32 = jnp.float32
+    xc = (x * dt[..., None]).astype(f32).reshape(b, nc, chunk, h, dh)
+    dA = (dt.astype(f32) * A.astype(f32)).reshape(b, nc, chunk, h)
+    Bc = B.astype(f32).reshape(b, nc, chunk, g, n)
+    Cc = C.astype(f32).reshape(b, nc, chunk, g, n)
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bc, hpg, axis=3)  # (b,nc,l,h,n)
+    Ch = jnp.repeat(Cc, hpg, axis=3)
+
+    dA_cs = jnp.cumsum(dA, axis=2)  # (b,nc,l,h)
+
+    # 1) intra-chunk (block-diagonal) term
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (b,nc,h,l,l)
+    scores = jnp.einsum("bclhn,bcthn->bchlt", Ch, Bh) * L
+    y_diag = jnp.einsum("bchlt,bcthd->bclhd", scores, xc)
+
+    # 2) chunk states: state_c = sum_t exp(dA_cs[-1]-dA_cs[t]) B_t x_t^T
+    decay = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (b,nc,l,h)
+    states = jnp.einsum("bclhn,bclh,bclhd->bchdn", Bh, decay, xc)
+
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (b,nc,h)
+
+    def step(carry, inp):
+        st, dec = inp  # (b,h,dh,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    init = (
+        jnp.zeros((b, h, dh, n), f32)
+        if initial_state is None
+        else initial_state.astype(f32)
+    )
+    final, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,h,dh,n)
+
+    # 4) inter-chunk output: C_t · (decay-to-t · state_in)
+    state_decay = jnp.exp(dA_cs)  # (b,nc,l,h)
+    y_off = jnp.einsum(
+        "bclhn,bclh,bchdn->bclhd", Ch, state_decay, prev_states
+    )
+
+    y = (y_diag + y_off).reshape(b, s, h, dh)[:, :orig_s]
+    return y, final
+
+
+def ssm_apply(params, cfg, x, *, cache=None, mode: str = "train"):
+    """Full Mamba-2 block. cache: {"conv": (B,W-1,C), "state": (B,h,dh,n)}
+    or None. Returns (out, new_cache)."""
+    s_cfg = cfg.ssm
+    d = cfg.d_model
+    di = s_cfg.d_inner(d)
+    nh = s_cfg.num_heads(d)
+    dh = s_cfg.head_dim
+    gn = s_cfg.ngroups * s_cfg.state_dim
+    dt_ = x.dtype
+
+    z = x @ params["w_z"].astype(dt_)
+    xbc = jnp.concatenate(
+        [x @ params["w_x"].astype(dt_), x @ params["w_B"].astype(dt_),
+         x @ params["w_C"].astype(dt_)], axis=-1,
+    )
+    dt_raw = x @ params["w_dt"].astype(dt_)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(
+        xbc, params["conv_w"], params["conv_b"], conv_state
+    )
+    x_ssm, B, C = jnp.split(xbc, [di, di + gn], axis=-1)
+    b_, s_, _ = x_ssm.shape
+    x_ssm = x_ssm.reshape(b_, s_, nh, dh)
+    B = B.reshape(b_, s_, s_cfg.ngroups, s_cfg.state_dim)
+    C = C.reshape(b_, s_, s_cfg.ngroups, s_cfg.state_dim)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    init_state = cache["state"] if cache is not None else None
+    if mode == "decode" and s_ == 1:
+        y, new_state = ssd_decode_step(x_ssm, dt, A, B, C, init_state)
+    else:
+        chunk = min(s_cfg.chunk_size, s_)
+        y, new_state = ssd_chunked(x_ssm, dt, A, B, C, chunk, init_state)
+
+    y = y + x_ssm.astype(jnp.float32) * params["D"].astype(jnp.float32)[
+        :, None
+    ]
+    y = y.reshape(b_, s_, di).astype(dt_)
+    # gated RMSNorm (mamba2 places it before out_proj); stats in f32 via
+    # dot accumulation, application in compute dtype (see common._mean_sq)
+    y = y * jax.nn.silu(z)
+    ms = jnp.einsum(
+        "...d,...d->...", y, y, preferred_element_type=jnp.float32
+    )[..., None] / y.shape[-1]
+    y = y * jax.lax.rsqrt(ms + 1e-6).astype(dt_)
+    y = y * params["norm_scale"].astype(dt_)
+    out = y @ params["w_out"].astype(dt_)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "state": new_state.astype(cache["state"].dtype)}
+    return out, new_cache
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """Single-token recurrent update. x: (b,1,h,dh); state: (b,h,dh,n)."""
+    b, _, h, dh = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hpg = h // g
+    f32 = jnp.float32
+    x0 = x[:, 0].astype(f32)  # (b,h,dh)
+    dt0 = dt[:, 0]  # (b,h)
+    B0 = jnp.repeat(B[:, 0].astype(f32), hpg, axis=1)  # (b,h,n)
+    C0 = jnp.repeat(C[:, 0].astype(f32), hpg, axis=1)
+    decay = jnp.exp(dt0 * A)  # (b,h)
+    state = jnp.zeros((b, h, dh, n), f32) if state is None else state.astype(f32)
+    new_state = state * decay[..., None, None] + jnp.einsum(
+        "bhd,bh,bhn->bhdn", x0, dt0, B0
+    )
+    y = jnp.einsum("bhdn,bhn->bhd", new_state, C0)[:, None]  # (b,1,h,dh)
+    return y, new_state
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    conv_ch = di + 2 * s.ngroups * s.state_dim
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, nh, s.head_dim, s.state_dim), jnp.float32),
+    }

@@ -1,0 +1,200 @@
+"""Encoder-decoder backbone (seamless-m4t): audio frontend STUB feeds
+precomputed frame embeddings to the encoder; the decoder self-attends
+causally and cross-attends to the encoder output.
+
+The encoder is non-causal, so Soft MoE is natively applicable there
+(paper's own setting); the decoder carries the causality caveat
+(DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import moe_apply, moe_init
+from ..distributed.api import constrain
+from ..layers.attention import (
+    _attend,
+    _attend_chunked,
+    _CHUNKED_THRESHOLD,
+    attention_apply,
+    attention_init,
+    gqa_init,
+    init_kv_cache,
+    make_mask,
+)
+from ..layers.common import lecun_init, norm_apply, norm_init, split_rngs, stack_pytrees
+from ..layers.embedding import embed, embedding_init, unembed
+from ..layers.mlp import mlp_apply, mlp_init
+from ..layers.rotary import apply_rope
+from .lm import block_init, segment_plan
+
+
+# --- cross attention --------------------------------------------------------
+
+
+def cross_attn_init(rng, cfg):
+    return gqa_init(rng, cfg)
+
+
+def cross_attn_apply(params, cfg, x, enc_kv, enc_mask=None):
+    """x: (B,S,d) decoder side; enc_kv: {"k","v"} precomputed (B,T,G,hd)."""
+    a = cfg.attention
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k, v = enc_kv["k"], enc_kv["v"]
+    if k.shape[1] * x.shape[1] > _CHUNKED_THRESHOLD:
+        kpos = jnp.arange(k.shape[1])
+        out = _attend_chunked(q, k, v, jnp.zeros((x.shape[1],), jnp.int32),
+                              kpos * 0, False, None)
+    else:
+        out = _attend(q, k, v, None)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def cross_kv(params, cfg, enc_out):
+    k = jnp.einsum("btd,dgk->btgk", enc_out, params["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("btd,dgk->btgk", enc_out, params["wv"].astype(enc_out.dtype))
+    return {"k": k, "v": v}
+
+
+# --- model ------------------------------------------------------------------
+
+
+def _enc_cfg(cfg):
+    return dataclasses.replace(cfg, causal=False, num_layers=cfg.encoder_layers)
+
+
+def encdec_init(rng, cfg):
+    rs = split_rngs(rng, 6)
+    enc_cfg = _enc_cfg(cfg)
+    moe_idx = set(cfg.moe_layer_indices())
+    params = {
+        "embed": embedding_init(rs[0], cfg.vocab_size, cfg.d_model),
+        "frontend": {
+            "w": lecun_init(
+                rs[1], (cfg.frontend.embed_dim, cfg.d_model),
+                fan_in=cfg.frontend.embed_dim,
+            )
+        },
+        "enc_segments": [
+            stack_pytrees(
+                [
+                    block_init(
+                        jax.random.fold_in(rs[2], start + j), enc_cfg, is_moe
+                    )
+                    for j in range(count)
+                ]
+            )
+            for start, count, is_moe in segment_plan(enc_cfg)
+        ],
+        "enc_norm": norm_init(cfg, cfg.d_model),
+        "dec_blocks": [
+            {
+                "self": block_init(jax.random.fold_in(rs[3], i), cfg,
+                                   i in moe_idx),
+                "cross_norm": norm_init(cfg, cfg.d_model),
+                "cross": cross_attn_init(jax.random.fold_in(rs[4], i), cfg),
+            }
+            for i in range(cfg.num_layers)
+        ],
+        "final_norm": norm_init(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embedding_init(rs[5], cfg.vocab_size, cfg.d_model)
+    return params
+
+
+def encode(params, cfg, frames):
+    """frames: (B, T, E) precomputed frontend embeddings (stub)."""
+    from .lm import block_apply  # local import to avoid cycle
+
+    enc_cfg = _enc_cfg(cfg)
+    x = frames.astype(jnp.dtype(cfg.dtype)) @ params["frontend"]["w"].astype(
+        jnp.dtype(cfg.dtype)
+    )
+    x = constrain(x, "batch", "seq", None)
+    aux_total = jnp.zeros((), jnp.float32)
+    for seg_params, (start, count, is_moe) in zip(
+        params["enc_segments"], segment_plan(enc_cfg)
+    ):
+        def body(carry, p, _is_moe=is_moe):
+            y, _, aux = block_apply(
+                p, enc_cfg, carry, is_moe=_is_moe, mode="train"
+            )
+            return y, aux
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, auxs = jax.lax.scan(body, x, seg_params)
+        aux_total = aux_total + auxs.sum()
+    return norm_apply(params["enc_norm"], cfg, x), aux_total
+
+
+def decode_step(params, cfg, tokens, enc_out, *, positions=None,
+                cache=None, mode: str = "train", last_only: bool = False):
+    """Decoder over tokens with cross-attention to enc_out."""
+    from .lm import block_apply
+
+    dt = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], tokens, dt)
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = [] if cache is not None else None
+    moe_idx = set(cfg.moe_layer_indices())
+    for i, blk in enumerate(params["dec_blocks"]):
+        cache_i = cache[i] if cache is not None else None
+        x, c, a = block_apply(
+            blk["self"], cfg, x, is_moe=i in moe_idx, positions=positions,
+            cache=None if cache_i is None else cache_i.get("self"), mode=mode,
+        )
+        aux = aux + a
+        xn = norm_apply(blk["cross_norm"], cfg, x)
+        if cache_i is not None and "cross_kv" in cache_i:
+            kv = cache_i["cross_kv"]
+        else:
+            kv = cross_kv(blk["cross"], cfg, enc_out)
+        x = x + cross_attn_apply(blk["cross"], cfg, xn, kv)
+        if new_cache is not None:
+            new_cache.append({"self": c, "cross_kv": kv})
+    if last_only:
+        x = x[:, -1:]
+    x = norm_apply(params["final_norm"], cfg, x)
+    table = params.get("unembed", params["embed"])
+    return unembed(table, x, cfg.logits_softcap), new_cache, aux
+
+
+def encdec_apply(params, cfg, tokens, frames, *, positions=None, cache=None,
+                 enc_out=None, mode: str = "train"):
+    """Full enc-dec forward. For decode mode, pass enc_out (+cache) from a
+    prior prefill instead of frames."""
+    aux = jnp.zeros((), jnp.float32)
+    if enc_out is None:
+        enc_out, enc_aux = encode(params, cfg, frames)
+        aux = aux + enc_aux
+    logits, new_cache, dec_aux = decode_step(
+        params, cfg, tokens, enc_out, positions=positions, cache=cache,
+        mode=mode,
+    )
+    return logits, (enc_out, new_cache), aux + dec_aux
+
+
+def init_encdec_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return [
+        {"self": {"attn": init_kv_cache(cfg, batch, max_len, True, dtype)}}
+        for _ in range(cfg.num_layers)
+    ]
+
+
+def encdec_loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    logits, _, aux = encdec_apply(params, cfg, tokens, batch["embeds"])
+    targets = tokens[:, 1:]
+    from .lm import cross_entropy
+
+    nll = cross_entropy(logits[:, :-1], targets)
+    loss = nll.mean()
+    return loss + aux, {"loss": loss, "aux_loss": aux}

@@ -1,0 +1,303 @@
+"""Decoder-only LM covering the dense / ssm / hybrid / moe / vlm families.
+
+Training lowers one scan-over-layers per homogeneous *segment* (contiguous
+layers with the same block structure — e.g. deepseek = [1 dense layer] +
+[26 MoE layers]) with remat, MaxText-style: HLO size and compile time stay
+bounded for 80-layer models. Serving (prefill/decode) unrolls a python loop
+over layers so per-layer caches may be heterogeneous (ring buffers for
+sliding-window layers, full-length for global layers, SSM states).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import moe_apply, moe_init, resolve_moe_cfg
+from ..distributed.api import constrain
+from ..layers.attention import attention_apply, attention_init, init_kv_cache
+from ..layers.common import lecun_init, norm_apply, norm_init, split_rngs, stack_pytrees
+from ..layers.embedding import embed, embedding_init, unembed
+from ..layers.mlp import mlp_apply, mlp_init
+from ..layers.ssm import init_ssm_cache, ssm_apply, ssm_init
+
+
+# ---------------------------------------------------------------------------
+# Segment plan
+# ---------------------------------------------------------------------------
+
+
+def segment_plan(cfg, n_layers: Optional[int] = None) -> List[Tuple[int, int, bool]]:
+    """Contiguous runs of (start, count, is_moe) with identical structure."""
+    n = n_layers if n_layers is not None else cfg.num_layers
+    moe_idx = set(cfg.moe_layer_indices())
+    segs: List[Tuple[int, int, bool]] = []
+    for i in range(n):
+        is_moe = i in moe_idx
+        if segs and segs[-1][2] == is_moe:
+            start, count, _ = segs[-1]
+            segs[-1] = (start, count + 1, is_moe)
+        else:
+            segs.append((i, 1, is_moe))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Transformer block
+# ---------------------------------------------------------------------------
+
+
+def block_init(rng, cfg, is_moe: bool):
+    rs = split_rngs(rng, 4)
+    d = cfg.d_model
+    p = {"norm1": norm_init(cfg, d)}
+    if cfg.has_attention():
+        p["attn"] = attention_init(rs[0], cfg)
+    if cfg.has_ssm():
+        p["ssm"] = ssm_init(rs[1], cfg)
+    if is_moe:
+        p["norm2"] = norm_init(cfg, d)
+        p["moe"] = moe_init(rs[2], d, resolve_moe_cfg(cfg.moe, cfg.d_ff),
+                            cfg.mlp_style)
+    elif cfg.d_ff > 0:
+        p["norm2"] = norm_init(cfg, d)
+        p["mlp"] = mlp_init(rs[3], d, cfg.d_ff, cfg.mlp_style)
+    return p
+
+
+def block_apply(params, cfg, x, *, is_moe: bool, is_global=True,
+                positions=None, cache=None, mode: str = "train",
+                use_kernel: bool = False):
+    """Returns (y, new_cache, aux). `is_global` may be a traced bool (scan
+    over gemma3's 5-local:1-global pattern with shared weights)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {} if cache is not None else None
+    xn = norm_apply(params["norm1"], cfg, x)
+    mix = 0.0
+    if cfg.has_attention():
+        a_out, a_cache = attention_apply(
+            params["attn"], cfg, xn,
+            layer_is_global=is_global, positions=positions,
+            cache=None if cache is None else cache.get("attn"),
+            mode=mode,
+        )
+        mix = mix + a_out
+        if new_cache is not None:
+            new_cache["attn"] = a_cache
+    if cfg.has_ssm():
+        s_out, s_cache = ssm_apply(
+            params["ssm"], cfg, xn,
+            cache=None if cache is None else cache.get("ssm"), mode=mode,
+        )
+        if cfg.hybrid_parallel and cfg.has_attention():
+            mix = (mix + s_out) * 0.5  # Hymba: mean-fuse parallel heads
+        else:
+            mix = mix + s_out
+        if new_cache is not None:
+            new_cache["ssm"] = s_cache
+    x = x + constrain(mix, "batch", "seq", None)
+
+    if "norm2" in params:
+        xn = norm_apply(params["norm2"], cfg, x)
+        if is_moe:
+            m_out, metrics = moe_apply(
+                params["moe"], resolve_moe_cfg(cfg.moe, cfg.d_ff), xn,
+                cfg.act, use_kernel=use_kernel,
+            )
+            aux = aux + metrics["moe_aux_loss"]
+        else:
+            m_out = mlp_apply(params["mlp"], xn, cfg.act)
+        x = x + constrain(m_out, "batch", "seq", None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+def _layer_flags(cfg, start: int, count: int):
+    a = cfg.attention
+    if a is None:
+        return jnp.ones((count,), bool)
+    return jnp.array(
+        [a.is_global_layer(start + j) for j in range(count)], bool
+    )
+
+
+def lm_init(rng, cfg):
+    rs = split_rngs(rng, 4)
+    params = {"embed": embedding_init(rs[0], cfg.vocab_size, cfg.d_model)}
+    if cfg.frontend.kind != "none":
+        params["frontend"] = {
+            "w": lecun_init(
+                rs[1], (cfg.frontend.embed_dim, cfg.d_model),
+                fan_in=cfg.frontend.embed_dim,
+            )
+        }
+    segs = segment_plan(cfg)
+    seg_params = []
+    for start, count, is_moe in segs:
+        blocks = [
+            block_init(jax.random.fold_in(rs[2], start + j), cfg, is_moe)
+            for j in range(count)
+        ]
+        seg_params.append(stack_pytrees(blocks))
+    params["segments"] = seg_params
+    params["final_norm"] = norm_init(cfg, cfg.d_model)
+    if not cfg.tie_embeddings and cfg.vocab_size:
+        params["unembed"] = embedding_init(rs[3], cfg.vocab_size, cfg.d_model)
+    return params
+
+
+def _remat_policy(cfg):
+    # "nothing": recompute everything inside the layer (min memory).
+    # "dots": save matmul outputs with no batch dims (less recompute).
+    name = getattr(cfg, "remat_policy", "nothing")
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _scan_segment(seg_params, cfg, x, flags, is_moe, use_kernel, positions):
+    def body(carry, xs):
+        p, is_global = xs
+        y, _, aux = block_apply(
+            p, cfg, carry, is_moe=is_moe, is_global=is_global,
+            positions=positions, cache=None, mode="train",
+            use_kernel=use_kernel,
+        )
+        return y, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=_remat_policy(cfg), prevent_cse=False
+        )
+    x, auxs = jax.lax.scan(body, x, (seg_params, flags))
+    return x, auxs.sum()
+
+
+def _unrolled_segment(seg_params, cfg, x, start, count, is_moe, caches,
+                      positions, mode, use_kernel):
+    """Python loop (serving path / scan_layers=False): heterogeneous caches."""
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for j in range(count):
+        p = jax.tree_util.tree_map(lambda a: a[j], seg_params)
+        is_global = (
+            cfg.attention.is_global_layer(start + j)
+            if cfg.attention is not None
+            else True
+        )
+        cache_j = caches[start + j] if caches is not None else None
+        x, c, a = block_apply(
+            p, cfg, x, is_moe=is_moe, is_global=is_global,
+            positions=positions, cache=cache_j, mode=mode,
+            use_kernel=use_kernel,
+        )
+        aux = aux + a
+        new_caches.append(c)
+    return x, aux, new_caches
+
+
+def lm_apply(params, cfg, tokens, *, embeds=None, positions=None,
+             cache=None, mode: str = "train", use_kernel: bool = False,
+             last_only: bool = False):
+    """tokens: (B, S) int32; embeds: (B, N, E) frontend stub (vlm).
+    Returns (logits, new_cache, aux). ``last_only`` unembeds only the
+    final position — prefill needs one next-token distribution, not
+    S×vocab logits (at qwen2-72b:prefill_32k the full-logit tensor is
+    32×32768×152064 f32 ≈ 638GB global)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], tokens, dtype)
+    if embeds is not None and "frontend" in params:
+        fe = embeds.astype(dtype) @ params["frontend"]["w"].astype(dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    s = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(s)
+    x = constrain(x, "batch", "seq", None)
+
+    aux = jnp.zeros((), jnp.float32)
+    segs = segment_plan(cfg)
+    if cache is None and cfg.scan_layers and mode == "train":
+        for seg_params, (start, count, is_moe) in zip(params["segments"], segs):
+            flags = _layer_flags(cfg, start, count)
+            x, a = _scan_segment(
+                seg_params, cfg, x, flags, is_moe, use_kernel, positions
+            )
+            aux = aux + a
+        new_cache = None
+    else:
+        new_cache = []
+        for seg_params, (start, count, is_moe) in zip(params["segments"], segs):
+            x, a, cs = _unrolled_segment(
+                seg_params, cfg, x, start, count, is_moe, cache,
+                positions, mode, use_kernel,
+            )
+            aux = aux + a
+            new_cache.extend(cs)
+        if cache is None:
+            new_cache = None
+
+    if last_only:
+        x = x[:, -1:]
+    x = norm_apply(params["final_norm"], cfg, x)
+    table = params["unembed"] if "unembed" in params else params["embed"]
+    logits = unembed(table, x, cfg.logits_softcap)
+    return logits, new_cache, aux
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Per-layer cache list (python list pytree — heterogeneous lengths)."""
+    caches = []
+    for i in range(cfg.num_layers):
+        c = {}
+        if cfg.has_attention():
+            a = cfg.attention
+            c["attn"] = init_kv_cache(
+                cfg, batch, max_len, a.is_global_layer(i), dtype
+            )
+        if cfg.has_ssm():
+            c["ssm"] = init_ssm_cache(cfg, batch, dtype)
+        caches.append(c)
+    return caches
+
+
+def lm_loss(params, cfg, batch, use_kernel: bool = False):
+    """Next-token cross-entropy. batch: {"tokens": (B,S) [, "embeds"]}"""
+    tokens = batch["tokens"]
+    logits, _, aux = lm_apply(
+        params, cfg, tokens, embeds=batch.get("embeds"), mode="train",
+        use_kernel=use_kernel,
+    )
+    # frontend embeds prepend non-text positions; score text only
+    n_prefix = logits.shape[1] - tokens.shape[1]
+    logits = logits[:, n_prefix:]
+    targets = tokens[:, 1:]
+    nll = cross_entropy(logits[:, :-1], targets)
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        mask = mask[:, 1:].astype(jnp.float32)
+        loss = (nll * mask).sum() / jnp.clip(mask.sum(), 1.0)
+    else:
+        loss = nll.mean()
+    metrics = {"loss": loss, "aux_loss": aux}
+    return loss + aux, metrics
+
+
+def cross_entropy(logits, targets):
+    """Sharding-friendly CE: lse(logits) - logits[target]. Unlike
+    take_along_axis over the (model-sharded) vocab axis — which forces an
+    all-gather of the full logits (40GB/device at the 152k-vocab train_4k
+    cell) — both terms reduce over the local vocab shard and psum per
+    token. The target pick is a masked reduce (select fuses; an explicit
+    one_hot would materialize a (B,S,V/16) f32 tensor)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    picked = jnp.sum(
+        jnp.where(vocab_iota == targets[..., None], logits, 0.0), axis=-1
+    )
+    return lse - picked

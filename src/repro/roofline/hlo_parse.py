@@ -1,0 +1,244 @@
+"""Optimized-HLO text parsing for the roofline collective term.
+
+Handles the cost_analysis blind spot: collectives inside ``while`` bodies
+(lax.scan over layers / KV blocks / microbatches) are multiplied by the
+loop's ``known_trip_count`` from XLA's backend_config, nested loops
+compounding. Replica groups are expanded from the iota shorthand
+(``[G,N]<=[dims]T(perm)``) so each collective gets:
+
+  * its ring algorithm factor  (all-reduce 2(n-1)/n, gather/scatter (n-1)/n)
+  * a pod-crossing flag (group spans devices of more than one pod) so
+    inter-pod bytes can be priced at DCN bandwidth instead of ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_INSTR_RE = re.compile(
+    r"=\s*\(?([a-z0-9]+)\[([0-9,]*)\]"  # result dtype[dims] (first tuple elt)
+)
+
+_WHILE_RE = re.compile(
+    r"while\(.*?\)\s*,\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)"
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?"
+)
+
+
+def _bytes_of(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _split_computations(text: str):
+    """Returns ({name: body_text}, entry_name)."""
+    comps: Dict[str, str] = {}
+    entry = None
+    cur_name, cur_lines = None, []
+    for line in text.splitlines():
+        m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(\([^)]*\))?.*\{\s*$", line)
+        if m and not line.startswith(" "):
+            if cur_name is not None:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name = m.group(2)
+            if m.group(1):
+                entry = cur_name
+            cur_lines = []
+        elif cur_name is not None:
+            cur_lines.append(line)
+    if cur_name is not None:
+        comps[cur_name] = "\n".join(cur_lines)
+    return comps, entry
+
+
+def _expand_groups(g: int, n: int, dims: str, perm: Optional[str]):
+    shape = [int(d) for d in dims.split(",")]
+    arr = np.arange(int(np.prod(shape))).reshape(shape)
+    if perm:
+        arr = arr.transpose([int(p) for p in perm.split(",")])
+    return arr.reshape(g, n)
+
+
+@dataclass
+class Collective:
+    kind: str
+    bytes: int
+    group_size: int
+    crosses_pod: bool
+    count: int = 1
+
+    def alg_factor(self) -> float:
+        n = max(self.group_size, 2)
+        if self.kind == "all-reduce":
+            return 2.0 * (n - 1) / n
+        if self.kind in ("all-gather", "reduce-scatter"):
+            return (n - 1) / n
+        return 1.0
+
+
+@dataclass
+class ModuleCollectives:
+    collectives: List[Collective] = field(default_factory=list)
+
+    def weighted_ici_bytes(self) -> float:
+        return sum(
+            c.bytes * c.count * c.alg_factor()
+            for c in self.collectives
+            if not c.crosses_pod
+        )
+
+    def weighted_pod_bytes(self) -> float:
+        return sum(
+            c.bytes * c.count * c.alg_factor()
+            for c in self.collectives
+            if c.crosses_pod
+        )
+
+    def by_kind(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for c in self.collectives:
+            out[c.kind] = out.get(c.kind, 0) + c.bytes * c.count
+        return out
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for c in self.collectives:
+            out[c.kind] = out.get(c.kind, 0) + c.count
+        return out
+
+
+def cpu_upcast_correction(text: str, min_bytes: int = 50_000_000) -> int:
+    """Bytes of CPU-only f32 copies of large bf16 tensors.
+
+    XLA-CPU legalizes bf16 dots to f32: every bf16 weight/activation
+    feeding a matmul gets an explicit ``f32 convert`` (and loop-invariant
+    converts of scanned operands are hoisted out of while loops, pinning
+    an f32 copy of the whole stacked buffer). None of this exists on TPU,
+    whose MXU consumes bf16 natively. We sum the result sizes of large
+    bf16→f32 converts, counting each distinct shape once (buffers of equal
+    shape are reused by the allocator) — a documented *estimate* used to
+    report a TPU-corrected temp figure next to the raw CPU number."""
+    # name -> dtype for every defined value
+    name_dt: Dict[str, str] = {}
+    for m in re.finditer(r"%([\w\.\-]+)\s*=\s*\(?([a-z0-9]+)\[", text):
+        name_dt[m.group(1)] = m.group(2)
+    seen: Dict[str, int] = {}
+    for m in re.finditer(
+        r"=\s*f32\[([0-9,]+)\][^=]*?\bconvert\(%([\w\.\-]+)\)", text
+    ):
+        dims, operand = m.groups()
+        if name_dt.get(operand) != "bf16":
+            continue
+        b = _bytes_of("f32", dims)
+        if b >= min_bytes:
+            seen[dims] = b
+    # while-state f32 stacks with a bf16 twin (hoisted stash converts)
+    for m in re.finditer(r"while[\w\.]*\s*=\s*\(([^)]*)\)\s*while\(", text):
+        tuple_txt = m.group(1)
+        bf16_dims = {
+            tm.group(1)
+            for tm in re.finditer(r"bf16\[([0-9,]+)\]", tuple_txt)
+        }
+        for tm in re.finditer(r"f32\[([0-9,]+)\]", tuple_txt):
+            dims = tm.group(1)
+            if dims in bf16_dims:
+                b = _bytes_of("f32", dims)
+                if b >= min_bytes:
+                    seen[dims] = b
+    return sum(seen.values())
+
+
+def parse_module_collectives(text: str,
+                             pod_size: Optional[int] = None
+                             ) -> ModuleCollectives:
+    comps, entry = _split_computations(text)
+
+    # while body -> trip count, and which computation contains the while
+    body_trips: Dict[str, int] = {}
+    contains: Dict[str, List[str]] = {}
+    for name, body in comps.items():
+        for line in body.splitlines():
+            if "while(" not in line:
+                continue
+            m = _WHILE_RE.search(line)
+            if not m:
+                continue
+            _cond, wbody = m.groups()
+            tm = _TRIP_RE.search(line)
+            trips = int(tm.group(1)) if tm else 1
+            body_trips[wbody] = trips
+            contains.setdefault(name, []).append(wbody)
+
+    # multiplier per computation by DFS from entry (nested loops compound)
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = max(mult.get(name, 0.0), m)
+        for child in contains.get(name, []):
+            visit(child, m * body_trips.get(child, 1))
+
+    if entry:
+        visit(entry, 1.0)
+
+    out = ModuleCollectives()
+    for name, body in comps.items():
+        m = mult.get(name)
+        if m is None:
+            # Not reachable through tracked whiles from entry: count once if
+            # it holds collectives (e.g. called computations we don't track).
+            m = 1.0 if any(k in body for k in _COLL_KINDS) else 0.0
+        if m == 0.0:
+            continue
+        for line in body.splitlines():
+            kind = next(
+                (
+                    k
+                    for k in _COLL_KINDS
+                    if f" {k}(" in line or f"{k}-start(" in line
+                ),
+                None,
+            )
+            if kind is None:
+                continue
+            im = _INSTR_RE.search(line)
+            if not im:
+                continue
+            nbytes = _bytes_of(im.group(1), im.group(2))
+            gm = _GROUPS_RE.search(line)
+            gsize, crosses = 2, False
+            if gm:
+                g, n, dims, perm = gm.groups()
+                groups = _expand_groups(int(g), int(n), dims, perm)
+                gsize = int(n)
+                if pod_size:
+                    crosses = bool(
+                        ((groups // pod_size).max(axis=1)
+                         != (groups // pod_size).min(axis=1)).any()
+                    )
+            out.collectives.append(
+                Collective(kind, nbytes, gsize, crosses, count=int(m))
+            )
+    return out

@@ -1,0 +1,8 @@
+from .engine import (  # noqa: F401
+    Request,
+    ServeEngine,
+    make_decode_step,
+    make_prefill_step,
+    sample_greedy,
+    sample_temperature,
+)

@@ -1,0 +1,139 @@
+"""Batched serving engine: prefill + single-token decode over a fixed-shape
+KV cache pool.
+
+``make_prefill_step`` / ``make_decode_step`` are the functions the dry-run
+lowers for the prefill/decode input shapes: decode processes ONE new token
+per sequence against a cache of `max_len` (the brief's decode_32k /
+long_500k semantics).
+
+The engine batches requests *generation-synchronously*: a wave of requests
+is admitted together (prompts right-padded to a common length), decoded in
+lockstep, and the next wave admits when the wave finishes. Rows that hit
+EOS early are masked out but their cache row is only reused at the wave
+boundary — positions are shared across the batch, which keeps the cache's
+ring-buffer position index global and the decode step free of per-row
+gather/scatter. Full continuous batching would move `pos` into the cache
+as a per-row array; noted as an extension in DESIGN.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import init_cache, lm_apply
+
+
+def make_prefill_step(cfg, max_len: int):
+    """(params, tokens(B,S), cache) -> (logits(B,1,V), cache)."""
+
+    def prefill(params, tokens, cache):
+        s = tokens.shape[1]
+        logits, cache, _ = lm_apply(
+            params, cfg, tokens, positions=jnp.arange(s), cache=cache,
+            mode="prefill", last_only=True,
+        )
+        return logits, cache
+
+    return prefill
+
+
+def make_decode_step(cfg):
+    """(params, tokens(B,1), pos(), cache) -> (logits(B,1,V), cache)."""
+
+    def decode(params, tokens, pos, cache):
+        logits, cache, _ = lm_apply(
+            params, cfg, tokens, positions=pos[None], cache=cache,
+            mode="decode",
+        )
+        return logits, cache
+
+    return decode
+
+
+def sample_greedy(rng, logits):
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+
+def sample_temperature(rng, logits, temperature: float = 1.0):
+    return jax.random.categorical(
+        rng, logits[:, -1].astype(jnp.float32) / max(temperature, 1e-6)
+    ).astype(jnp.int32)
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, batch_size: int, max_len: int,
+                 eos_id: Optional[int] = None, pad_id: int = 0,
+                 sampler: Callable = sample_greedy, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch_size
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.sampler = sampler
+        self.rng = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(make_prefill_step(cfg, max_len))
+        self._decode = jax.jit(make_decode_step(cfg))
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _next_wave(self) -> List[Request]:
+        wave = self.queue[: self.batch]
+        self.queue = self.queue[self.batch:]
+        return wave
+
+    def _run_wave(self, wave: List[Request]) -> int:
+        plen = max(len(r.prompt) for r in wave)
+        toks = jnp.full((self.batch, plen), self.pad_id, jnp.int32)
+        for i, r in enumerate(wave):
+            # right-align so the last prompt token sits at position plen-1
+            toks = toks.at[i, plen - len(r.prompt):].set(
+                jnp.asarray(r.prompt, jnp.int32)
+            )
+        cache = init_cache(self.cfg, self.batch, self.max_len)
+        logits, cache = self._prefill(self.params, toks, cache)
+        self.rng, r_s = jax.random.split(self.rng)
+        nxt = self.sampler(r_s, logits)
+        for i, r in enumerate(wave):
+            r.out.append(int(nxt[i]))
+        steps = 0
+        budget = max(r.max_new_tokens for r in wave)
+        pos = plen
+        cur = nxt[:, None]
+        while steps < budget - 1 and pos < self.max_len:
+            logits, cache = self._decode(
+                self.params, cur, jnp.asarray(pos, jnp.int32), cache
+            )
+            self.rng, r_s = jax.random.split(self.rng)
+            nxt = self.sampler(r_s, logits)
+            for i, r in enumerate(wave):
+                if not r.done and len(r.out) < r.max_new_tokens:
+                    tok = int(nxt[i])
+                    r.out.append(tok)
+                    if self.eos_id is not None and tok == self.eos_id:
+                        r.done = True
+            cur = nxt[:, None]
+            pos += 1
+            steps += 1
+        for r in wave:
+            r.done = True
+        return steps + 1
+
+    def run(self) -> int:
+        total = 0
+        while self.queue:
+            total += self._run_wave(self._next_wave())
+        return total

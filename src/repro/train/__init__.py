@@ -1,0 +1,7 @@
+from .step import (  # noqa: F401
+    init_train_state,
+    jit_train_step,
+    make_train_step,
+    state_shardings,
+)
+from .trainer import StragglerWatchdog, Trainer, TrainerConfig  # noqa: F401

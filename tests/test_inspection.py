@@ -1,0 +1,26 @@
+"""Model inspection (paper §5): routing statistics sanity."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core import moe_init
+from repro.core.inspection import routing_stats, summarize
+
+
+def test_routing_stats():
+    cfg = MoEConfig(variant="soft", num_experts=16, expert_d_ff=32)
+    params = moe_init(jax.random.PRNGKey(0), 32, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 48, 32))
+    stats = routing_stats(x, params, cfg)
+    # total dispatch mass equals total slots (each slot's column sums to 1)
+    total = float(stats["token_contribution"].sum(-1).mean())
+    assert abs(total - 16) < 1e-3
+    # no token at zero contribution (paper: no dropping)
+    assert float(stats["token_contribution_min"]) > 0
+    # covering 90% of a slot needs at least as many tokens as 50%
+    assert bool(
+        (stats["tokens_for_90pct"] >= stats["tokens_for_50pct"]).all()
+    )
+    s = summarize(stats)
+    assert "expert_importance_spread" in s
+    assert s["max_dispatch_weight"] <= 1.0

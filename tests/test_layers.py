@@ -1,0 +1,177 @@
+"""Layer substrate: attention paths (dense == chunked/flash, MLA, sliding
+window), rotary, norms, SSD == sequential recurrence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import AttentionConfig, ModelConfig, SSMConfig
+from repro.layers import attention as attn
+from repro.layers.common import l2_normalize, norm_apply, norm_init
+from repro.layers.rotary import apply_rope
+from repro.layers.ssm import ssd_chunked, ssd_decode_step
+
+
+def test_chunked_attention_matches_dense():
+    rng = jax.random.PRNGKey(0)
+    b, sq, h, g, d = 2, 64, 8, 2, 32
+    q = jax.random.normal(rng, (b, sq, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, sq, g, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, sq, g, d))
+    pos = jnp.arange(sq)
+    for causal in (True, False):
+        for window in (None, 16):
+            mask = attn.make_mask(pos, pos, causal, window)[None]
+            dense = attn._attend(q, k, v, mask)
+            chunk = attn._attend_chunked(q, k, v, pos, pos, causal, window,
+                                         block=16)
+            np.testing.assert_allclose(
+                np.asarray(dense), np.asarray(chunk), rtol=2e-5, atol=2e-5
+            )
+
+
+def test_chunked_attention_mla_vdim():
+    """Different value dim (MLA latent path) through the chunked kernel."""
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (1, 16, 4, 24))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 1, 24))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 16, 1, 8))
+    pos = jnp.arange(16)
+    mask = attn.make_mask(pos, pos, True, None)[None]
+    dense = attn._attend(q, k, v, mask, scale=0.3)
+    chunk = attn._attend_chunked(q, k, v, pos, pos, True, None, scale=0.3,
+                                 block=4)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunk),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rope_preserves_norm_and_relative_positions():
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (1, 8, 2, 16))
+    y = apply_rope(x, jnp.arange(8), 10000.0)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(x, axis=-1)),
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        rtol=1e-5,
+    )
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([i]), 1e4)
+        kj = apply_rope(k, jnp.array([j]), 1e4)
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-4
+
+
+def test_sliding_window_mask():
+    pos = jnp.arange(8)
+    m = attn.make_mask(pos, pos, True, 3, is_global=False)
+    m = np.asarray(m)
+    assert m[5, 5] and m[5, 4] and m[5, 3]
+    assert not m[5, 2]  # outside window
+    assert not m[2, 5]  # future
+    # global flag disables the window
+    mg = np.asarray(attn.make_mask(pos, pos, True, 3, is_global=True))
+    assert mg[5, 0]
+
+
+def test_norms():
+    for norm in ("rmsnorm", "layernorm"):
+        cfg = ModelConfig(norm=norm)
+        p = norm_init(cfg, 32)
+        x = 3.0 + 2.0 * jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+        y = norm_apply(p, cfg, x)
+        if norm == "layernorm":
+            np.testing.assert_allclose(np.asarray(y.mean(-1)), 0.0, atol=1e-2)
+        np.testing.assert_allclose(
+            np.asarray(jnp.sqrt((y.astype(jnp.float32) ** 2).mean(-1))),
+            1.0, atol=5e-2,
+        )
+
+
+def test_l2_normalize_unit_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 16))
+    y = l2_normalize(x, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=1)), 1.0, rtol=1e-4
+    )
+
+
+def _ssd_sequential(x, dt, A, B, C):
+    """Token-by-token recurrence oracle for SSD."""
+    b, s, h, dh = x.shape
+    state = jnp.zeros((b, h, dh, B.shape[-1]))
+    ys = []
+    for t in range(s):
+        y, state = ssd_decode_step(
+            x[:, t:t+1], dt[:, t:t+1], A, B[:, t:t+1], C[:, t:t+1], state
+        )
+        ys.append(y[:, 0])
+    return jnp.stack(ys, 1), state
+
+
+def test_ssd_chunked_matches_sequential():
+    rng = jax.random.PRNGKey(0)
+    b, s, h, dh, n = 2, 24, 4, 8, 16
+    x = jax.random.normal(rng, (b, s, h, dh))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)))
+    B = jax.random.normal(jax.random.PRNGKey(3), (b, s, 1, n))
+    C = jax.random.normal(jax.random.PRNGKey(4), (b, s, 1, n))
+    for chunk in (8, 6):  # divisible and ragged (padding path)
+        y_c, st_c = ssd_chunked(x, dt, A, B, C, chunk)
+        y_s, st_s = _ssd_sequential(x, dt, A, B, C)
+        np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_s),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(st_c), np.asarray(st_s),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_initial_state_continuation():
+    """Chunked prefill then decode continues the same recurrence."""
+    rng = jax.random.PRNGKey(0)
+    b, s, h, dh, n = 1, 16, 2, 4, 8
+    x = jax.random.normal(rng, (b, s, h, dh))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)))
+    B = jax.random.normal(jax.random.PRNGKey(3), (b, s, 1, n))
+    C = jax.random.normal(jax.random.PRNGKey(4), (b, s, 1, n))
+    y_full, st_full = ssd_chunked(x, dt, A, B, C, 8)
+    y1, st1 = ssd_chunked(x[:, :8], dt[:, :8], A, B[:, :8], C[:, :8], 8)
+    y2, st2 = ssd_chunked(x[:, 8:], dt[:, 8:], A, B[:, 8:], C[:, 8:], 8,
+                          initial_state=st1)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full),
+        rtol=2e-4, atol=2e-4,
+    )
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mla_decode_matches_train():
+    cfg = reduced(get_config("deepseek-v2-lite-16b"))
+    from repro.layers.attention import attention_init, attention_apply, init_kv_cache
+    params = attention_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    full, _ = attention_apply(params, cfg, x, positions=jnp.arange(12))
+    cache = init_kv_cache(cfg, 2, 12, True)
+    out_p, cache = attention_apply(
+        params, cfg, x[:, :8], positions=jnp.arange(8), cache=cache,
+        mode="prefill",
+    )
+    outs = [out_p]
+    for t in range(8, 12):
+        o, cache = attention_apply(
+            params, cfg, x[:, t:t+1], positions=jnp.arange(t, t+1),
+            cache=cache, mode="decode",
+        )
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec, np.float32), np.asarray(full, np.float32),
+        rtol=0.1, atol=0.05,
+    )

@@ -1,0 +1,107 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.core import moe_init, soft_moe_weights
+from repro.kernels import ref
+from repro.layers.common import l2_normalize
+from repro.models.lm import cross_entropy
+from repro.optim import compress_with_feedback, dequantize_int8, quantize_int8
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+@given(
+    m=st.integers(2, 24),
+    d=st.integers(2, 24),
+    n=st.integers(1, 6),
+    p=st.integers(1, 3),
+    seed=st.integers(0, 2**16),
+)
+@_settings
+def test_soft_moe_weights_are_proper_distributions(m, d, n, p, seed):
+    rng = jax.random.PRNGKey(seed)
+    x = jax.random.normal(rng, (1, m, d))
+    cfg = MoEConfig(variant="soft", num_experts=n, expert_d_ff=4,
+                    slots_per_expert=p)
+    params = moe_init(rng, d, cfg)
+    d_w, c_w = soft_moe_weights(x, params["phi"], params["scale"])
+    # D columns (over tokens) and C rows (over slots) are simplexes
+    np.testing.assert_allclose(np.asarray(d_w.sum(1)), 1.0, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(c_w.sum((2, 3))), 1.0, rtol=1e-4)
+    assert bool((d_w >= 0).all()) and bool((c_w >= 0).all())
+
+
+@given(
+    m=st.integers(1, 32), d=st.integers(1, 48), seed=st.integers(0, 2**16)
+)
+@_settings
+def test_l2_normalize_unit_or_zero(m, d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, d))
+    y = l2_normalize(x, axis=1)
+    norms = np.asarray(jnp.linalg.norm(y, axis=1))
+    assert ((np.abs(norms - 1.0) < 1e-3) | (norms < 1e-3)).all()
+
+
+@given(
+    b=st.integers(1, 4), s=st.integers(2, 16), v=st.integers(2, 50),
+    seed=st.integers(0, 2**16),
+)
+@_settings
+def test_cross_entropy_matches_log_softmax(b, s, v, seed):
+    rng = jax.random.PRNGKey(seed)
+    logits = 5.0 * jax.random.normal(rng, (b, s, v))
+    targets = jax.random.randint(jax.random.PRNGKey(seed + 1), (b, s), 0, v)
+    got = cross_entropy(logits, targets)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    want = -jnp.take_along_axis(lp, targets[..., None], -1)[..., 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(
+    n=st.integers(1, 300), scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**16),
+)
+@_settings
+def test_int8_quantization_error_bound(n, scale, seed):
+    x = scale * jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert (err <= float(s) / 2 + 1e-6).all()  # round-to-nearest bound
+
+
+@given(seed=st.integers(0, 2**16))
+@_settings
+def test_error_feedback_drives_accumulated_error_down(seed):
+    """Summing EF-compressed copies of a constant gradient converges to
+    the true sum: the residual never accumulates (contractive EF)."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    err = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    for _ in range(20):
+        q, s, err = compress_with_feedback(g, err)
+        total = total + dequantize_int8(q, s)
+    avg = total / 20
+    np.testing.assert_allclose(np.asarray(avg), np.asarray(g),
+                               atol=float(jnp.abs(g).max()) * 0.01 + 1e-5)
+
+
+@given(
+    m=st.integers(2, 16), d=st.integers(4, 32), s=st.integers(2, 16),
+    seed=st.integers(0, 2**16),
+)
+@_settings
+def test_dispatch_ref_convexity(m, d, s, seed):
+    """Slots are convex combinations of tokens: each slot lies inside the
+    per-dimension [min, max] envelope of the token set."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, d))
+    phi = jax.random.normal(jax.random.PRNGKey(seed + 1), (d, s))
+    slots = ref.dispatch_ref(x, ref.normalized_phi(phi, 1.0))
+    lo = np.asarray(x.min(0)) - 1e-4
+    hi = np.asarray(x.max(0)) + 1e-4
+    sl = np.asarray(slots)
+    assert (sl >= lo).all() and (sl <= hi).all()

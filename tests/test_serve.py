@@ -1,0 +1,66 @@
+"""Serving engine behaviour: wave batching, EOS, sampling, cache reuse."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models import lm_init
+from repro.serve import Request, ServeEngine, sample_temperature
+
+
+def _engine(batch=2, **kw):
+    cfg = reduced(get_config("llama3-8b"))
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    return cfg, ServeEngine(cfg, params, batch_size=batch, max_len=64, **kw)
+
+
+def test_multi_wave_batching():
+    cfg, eng = _engine(batch=2)
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=4) for _ in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) == 4 for r in reqs)
+
+
+def test_eos_stops_request():
+    cfg, eng = _engine(batch=1)
+    # force EOS on the first sampled token by making every token the eos
+    first = None
+    probe = Request(prompt=[1, 2, 3], max_new_tokens=8)
+    eng.submit(probe)
+    eng.run()
+    first = probe.out[0]
+    cfg2, eng2 = _engine(batch=1, eos_id=first)
+    req = Request(prompt=[1, 2, 3], max_new_tokens=8)
+    eng2.submit(req)
+    eng2.run()
+    assert req.out[0] == first
+    assert len(req.out) <= 2  # stopped at (or just after) EOS
+
+
+def test_temperature_sampler_runs():
+    cfg, eng = _engine(
+        batch=2,
+        sampler=lambda r, l: sample_temperature(r, l, 1.0),
+        seed=7,
+    )
+    reqs = [Request(prompt=[5, 6], max_new_tokens=5) for _ in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(len(r.out) == 5 for r in reqs)
+    assert all(
+        0 <= t < cfg.vocab_size for r in reqs for t in r.out
+    )
+
+
+def test_variable_prompt_lengths_right_aligned():
+    cfg, eng = _engine(batch=2)
+    r1 = Request(prompt=[1, 2, 3, 4, 5, 6], max_new_tokens=3)
+    r2 = Request(prompt=[7], max_new_tokens=3)
+    eng.submit(r1)
+    eng.submit(r2)
+    eng.run()
+    assert r1.done and r2.done
+    assert len(r1.out) == 3 and len(r2.out) == 3

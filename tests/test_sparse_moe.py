@@ -1,0 +1,86 @@
+"""Sparse baselines (Tokens Choice / Experts Choice): routing semantics,
+capacity/dropping behavior, BPR — the pathologies the paper contrasts."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.core import moe_apply, moe_init
+
+
+def _mk(variant, **kw):
+    cfg = MoEConfig(variant=variant, num_experts=8, expert_d_ff=32,
+                    top_k=2, capacity_factor=1.0, group_size=1, **kw)
+    params = moe_init(jax.random.PRNGKey(0), 16, cfg)
+    return cfg, params
+
+
+def test_tokens_choice_shapes_and_finite():
+    cfg, params = _mk("tokens_choice")
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 16))
+    y, m = moe_apply(params, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    assert float(m["moe_aux_loss"]) > 0  # balance + z losses active
+
+
+def test_tokens_choice_no_drop_with_slack():
+    cfg, params = _mk("tokens_choice")
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 16))
+    _, m = moe_apply(params, cfg, x)
+    assert float(m["dropped_fraction"]) == 0.0
+
+
+def test_tokens_choice_drops_under_tight_capacity():
+    """Paper App. B: tight buffers => dropping grows with experts."""
+    cfg, params = _mk("tokens_choice", bpr=False)
+    cfg = dataclasses.replace(cfg, capacity_factor=0.25)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 16))
+    _, m = moe_apply(params, cfg, x)
+    assert float(m["dropped_fraction"]) > 0.0
+
+
+def test_bpr_priority_keeps_high_score_tokens():
+    """With BPR, the kept tokens must include the highest-gate tokens."""
+    cfg, params = _mk("tokens_choice", bpr=True)
+    cfg = dataclasses.replace(cfg, capacity_factor=0.5, top_k=1)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 16))
+    logits = jnp.einsum(
+        "btd,de->bte", x, params["router"]
+    )
+    probs = jax.nn.softmax(logits, -1)
+    gate = probs.max(-1)[0]  # (t,)
+    # run both and compare drop sets indirectly via output energy on the
+    # top-gate token: with BPR it must be processed (nonzero output)
+    y_bpr, m_bpr = moe_apply(params, cfg, x)
+    t_star = int(jnp.argmax(gate))
+    assert float(jnp.abs(y_bpr[0, t_star]).sum()) > 0
+
+
+def test_experts_choice_capacity_exact():
+    """Experts-Choice: every expert processes exactly capacity tokens."""
+    cfg, params = _mk("experts_choice")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 16))
+    y, m = moe_apply(params, cfg, x)
+    assert y.shape == x.shape
+    # some tokens unchosen (the paper's dropping phenomenon, App. B)
+    assert 0.0 <= float(m["dropped_fraction"]) < 1.0
+
+
+def test_batch_effects_exist_for_sparse_routing():
+    """Tokens compete for capacity across the group — the SAME sequence
+    can get different outputs depending on batch composition (the paper's
+    motivation for per-sequence-deterministic Soft MoE)."""
+    cfg, params = _mk("tokens_choice", bpr=True)
+    cfg = dataclasses.replace(cfg, capacity_factor=0.25, group_size=4)
+    rng = jax.random.PRNGKey(3)
+    x1 = jax.random.normal(rng, (4, 16, 16))
+    x2 = x1.at[1:].set(jax.random.normal(jax.random.PRNGKey(4), (3, 16, 16)))
+    y1, _ = moe_apply(params, cfg, x1)
+    y2, _ = moe_apply(params, cfg, x2)
+    # sequence 0 identical in both batches, output may differ
+    diff = float(jnp.abs(y1[0] - y2[0]).max())
+    assert diff > 0  # batch effect present (Soft MoE test asserts absence)

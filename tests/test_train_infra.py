@@ -1,0 +1,168 @@
+"""Training substrate: optimizer, schedules, microbatching, checkpointing,
+trainer fault-tolerance (resume, straggler watchdog, preemption)."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.data import SyntheticImages, SyntheticLM
+from repro.models import build_model
+from repro.optim import (
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    schedule_lr,
+)
+from repro.train import StragglerWatchdog, Trainer, TrainerConfig, make_train_step
+from repro.train.step import init_train_state
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    cfg = OptimizerConfig(peak_lr=0.3, schedule="constant", warmup_steps=0,
+                          weight_decay=0.0, total_steps=10**9,
+                          cooldown_steps=1)
+    for _ in range(300):
+        g = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(g, opt, params, cfg, lr=0.05)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_grad_clipping():
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+    assert float(norm) == pytest.approx(200.0)
+
+
+def test_schedules():
+    cfg = OptimizerConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                          cooldown_steps=20, schedule="cosine")
+    lrs = [float(schedule_lr(cfg, jnp.asarray(s))) for s in range(0, 101, 5)]
+    assert lrs[0] == 0.0
+    assert max(lrs) <= 1.0
+    assert lrs[-1] == pytest.approx(0.0, abs=1e-6)  # cooldown tail
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = reduced(get_config("qwen2-0.5b"))
+    init, loss_fn, _ = build_model(cfg)
+    state = init_train_state(jax.random.PRNGKey(0), init)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, batch_size=8)
+    batch = data.batch(0)
+    ocfg = OptimizerConfig(peak_lr=1e-2, schedule="constant",
+                           warmup_steps=0, total_steps=10**9,
+                           cooldown_steps=1, grad_clip_norm=1e9)
+    s1, m1 = make_train_step(loss_fn, ocfg, microbatches=1)(state, batch)
+    s2, m2 = make_train_step(loss_fn, ocfg, microbatches=4)(state, batch)
+    # Same data => same mean loss and same accumulated gradient (compare
+    # the first Adam moment, mu = (1-b1)·g after one step; comparing
+    # post-update params is ill-conditioned — Adam's normalized update is
+    # sign-like for near-zero gradients).
+    assert float(m1["total_loss"]) == pytest.approx(
+        float(m2["total_loss"]), rel=1e-3
+    )
+    g1 = jax.tree_util.tree_leaves(s1["opt"]["mu"])
+    g2 = jax.tree_util.tree_leaves(s2["opt"]["mu"])
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-2, atol=5e-4)
+
+
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        tree = {"a": jnp.arange(6).reshape(2, 3), "b": [jnp.ones(4),
+                {"c": jnp.zeros((2, 2), jnp.bfloat16)}]}
+        for step in (10, 20, 30):
+            mgr.save(step, tree)
+        assert mgr.latest_step() == 30
+        assert len(os.listdir(d)) == 2  # keep-N GC
+        step, restored = mgr.restore_latest(tree)
+        assert step == 30
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_and_atomicity():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=3)
+        tree = {"w": jnp.ones((128, 128))}
+        mgr.save_async(1, tree)
+        mgr.wait()
+        assert mgr.latest_step() == 1
+        assert not any(n.endswith(".tmp") for n in os.listdir(d))
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(1, {"w": jnp.ones((4,))})
+        with pytest.raises(ValueError):
+            mgr.restore(1, {"w": jnp.ones((5,))})
+
+
+def test_trainer_resume_and_loss_decreases():
+    cfg = reduced(get_config("qwen2-0.5b"))
+    init, loss_fn, _ = build_model(cfg)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=24, batch_size=8)
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainerConfig(total_steps=20, checkpoint_every=10,
+                           checkpoint_dir=d, log_every=5)
+        oc = OptimizerConfig(peak_lr=3e-3, warmup_steps=2, total_steps=20,
+                             cooldown_steps=2, schedule="constant")
+        tr = Trainer(tc, loss_fn, init, oc, data)
+        tr.run(jax.random.PRNGKey(0))
+        losses = [m["total_loss"] for m in tr.metrics_history]
+        assert losses[-1] < losses[0]
+        # resume continues from the checkpoint, not from scratch
+        tc2 = TrainerConfig(total_steps=25, checkpoint_every=10,
+                            checkpoint_dir=d, log_every=5)
+        tr2 = Trainer(tc2, loss_fn, init, oc, data)
+        tr2.run(jax.random.PRNGKey(0))
+        assert tr2.metrics_history[0]["step"] >= 20
+
+
+def test_straggler_watchdog():
+    wd = StragglerWatchdog(factor=2.0)
+    for _ in range(10):
+        assert not wd.observe(0, 1.0)
+    assert wd.observe(10, 5.0)  # 5x EWMA -> straggler
+    assert len(wd.events) == 1
+    # EWMA not polluted by the straggler
+    assert abs(wd.ewma - 1.0) < 1e-6
+
+
+def test_data_pipeline_determinism_and_host_sharding():
+    d1 = SyntheticLM(vocab_size=100, seq_len=8, batch_size=8, seed=3)
+    d2 = SyntheticLM(vocab_size=100, seq_len=8, batch_size=8, seed=3)
+    np.testing.assert_array_equal(
+        np.asarray(d1.batch(7)["tokens"]), np.asarray(d2.batch(7)["tokens"])
+    )
+    # different steps differ
+    assert (np.asarray(d1.batch(1)["tokens"]) !=
+            np.asarray(d1.batch(2)["tokens"])).any()
+    # host sharding: two hosts see different slices of the same step
+    h0 = SyntheticLM(vocab_size=100, seq_len=8, batch_size=8, host_id=0,
+                     num_hosts=2)
+    h1 = SyntheticLM(vocab_size=100, seq_len=8, batch_size=8, host_id=1,
+                     num_hosts=2)
+    assert h0.batch(0)["tokens"].shape[0] == 4
+    assert (np.asarray(h0.batch(0)["tokens"]) !=
+            np.asarray(h1.batch(0)["tokens"])).any()
+
+
+def test_synthetic_images_learnable():
+    d = SyntheticImages(num_patches=4, patch_dim=16, batch_size=16,
+                        num_classes=10)
+    b = d.batch(0)
+    assert b["patches"].shape == (16, 4, 16)
+    assert set(np.asarray(b["labels"])) <= set(range(10))
