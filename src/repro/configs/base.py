@@ -89,6 +89,12 @@ class MoEConfig:
     router_z_loss_weight: float = 1e-3
     # Router group size in sequences (sparse variants; paper §3.5).
     group_size: int = 1
+    # Fused Pallas kernel policy (Soft MoE, use_kernel=True; see
+    # repro.kernels.tuning). 0 = derive block sizes from the (m, d, S)
+    # heuristic table; set explicitly to pin a tiling (or autotune).
+    kernel_block_tokens: int = 0
+    kernel_block_slots: int = 0
+    kernel_acc_dtype: str = "float32"  # accumulator/softmax-stat dtype
 
     def total_slots(self) -> int:
         return self.num_experts * self.slots_per_expert

@@ -68,13 +68,16 @@ def soft_moe_apply(params, moe_cfg, x, act: str = "silu",
     b, m, d = x.shape
     n, p = moe_cfg.num_experts, moe_cfg.slots_per_expert
     phi = params["phi"]
-    c_weights = None
+    c_weights = c_stats = None
     if use_kernel:
         from ..kernels import ops as kops
+        from ..kernels.tuning import config_from_moe
 
+        kcfg = config_from_moe(moe_cfg, m=m, d=d)
         phi_n = kops.normalized_phi(phi, params["scale"])
-        slots = kops.soft_moe_dispatch(x, phi_n)  # (b, n·p, d)
-        slots = slots.reshape(b, n, p, d)
+        # one logits pass: dispatched slots + the combine softmax stats
+        slots, c_stats = kops.soft_moe_routing(x, phi_n, config=kcfg)
+        slots = slots.reshape(b, n, p, d)  # (b, n·p, d) -> (b, n, p, d)
     else:
         d_w, c_weights = soft_moe_weights(x, phi, params["scale"])
         # Distribution note: GSPMD's propagated layout (slot axis of the
@@ -94,9 +97,8 @@ def soft_moe_apply(params, moe_cfg, x, act: str = "silu",
     ys = ys.reshape(n, b, p, d).transpose(1, 0, 2, 3)  # (b,n,p,d)
 
     if use_kernel:
-        from ..kernels import ops as kops
-
-        y = kops.soft_moe_combine(x, phi_n, ys.reshape(b, n * p, d))
+        y = kops.soft_moe_combine(x, phi_n, ys.reshape(b, n * p, d),
+                                  c_stats=c_stats, config=kcfg)
     else:
         y = jnp.einsum(
             "bnpd,bmnp->bmd", ys.astype(jnp.float32), c_weights
@@ -104,22 +106,22 @@ def soft_moe_apply(params, moe_cfg, x, act: str = "silu",
     y = y.astype(x.dtype)
 
     if moe_cfg.num_shared_experts:
-        sh = experts_apply(
-            params["shared"],
-            jnp.broadcast_to(
-                x[None].reshape(1, b * m, d),
-                (moe_cfg.num_shared_experts, b * m, d),
-            ),
-            act,
-        )
+        # reshape once; experts_apply broadcasts the leading expert axis
+        # (no (num_shared × b·m × d) materialization).
+        sh = experts_apply(params["shared"], x.reshape(1, b * m, d), act)
         y = y + sh.sum(0).reshape(b, m, d)
 
     metrics = {
         "moe_aux_loss": jnp.zeros((), jnp.float32),  # balanced by construction
     }
+    # model-inspection stat (paper §5 / App. E): max combine weight —
+    # values approaching 1.0 signal the softmax collapse the L2-norm fix
+    # prevents. On the kernel path it falls out of the saved softmax
+    # stats: the max weight for token i is exp(mx_i − mx_i)/den_i = 1/den_i.
     if c_weights is not None:
-        # model-inspection stat (paper §5 / App. E): max combine weight —
-        # values approaching 1.0 signal the softmax collapse the L2-norm
-        # fix prevents.
         metrics["max_combine"] = jax.lax.stop_gradient(c_weights.max())
+    elif c_stats is not None:
+        metrics["max_combine"] = jax.lax.stop_gradient(
+            (1.0 / c_stats[1]).max()
+        )
     return y, metrics

@@ -122,14 +122,9 @@ def tokens_choice_apply(params, moe_cfg, x, act: str = "silu"):
     y = y.reshape(b, m, d).astype(x.dtype)
 
     if moe_cfg.num_shared_experts:
-        sh = experts_apply(
-            params["shared"],
-            jnp.broadcast_to(
-                x.reshape(1, b * m, d),
-                (moe_cfg.num_shared_experts, b * m, d),
-            ),
-            act,
-        )
+        # reshape once; experts_apply broadcasts the leading expert axis
+        # (no (num_shared × b·m × d) materialization).
+        sh = experts_apply(params["shared"], x.reshape(1, b * m, d), act)
         y = y + sh.sum(0).reshape(b, m, d).astype(x.dtype)
 
     aux = _aux_losses(logits, probs, expert_index, e, moe_cfg)

@@ -1,4 +1,15 @@
-"""Pallas TPU kernels for the Soft-MoE hot path (dispatch/combine) with
-pure-jnp oracles in ref.py; see soft_moe_kernels.py for the tiling story."""
-from . import ops, ref  # noqa: F401
-from .soft_moe_kernels import combine_pallas, dispatch_pallas  # noqa: F401
+"""Pallas TPU kernels for the Soft-MoE hot path (dispatch/combine), fused
+forward AND flash-style backward, with pure-jnp oracles in ref.py; see
+soft_moe_kernels.py for the tiling story and tuning.py for block-size /
+interpret policy."""
+from . import ops, ref, tuning  # noqa: F401
+from .soft_moe_kernels import (  # noqa: F401
+    combine_apply_pallas,
+    combine_bwd_pallas,
+    combine_online_pallas,
+    combine_pallas,
+    dispatch_bwd_pallas,
+    dispatch_pallas,
+    routing_fwd_pallas,
+)
+from .tuning import KernelConfig, autotune, config_from_moe, default_config  # noqa: F401

@@ -1,74 +1,161 @@
-"""Jitted wrappers for the Soft-MoE kernels.
+"""Jitted wrappers for the Soft-MoE kernels: fused forward AND backward.
 
-Forward runs the fused Pallas kernels (interpret=True on CPU — TPU is the
-target); backward is a custom_vjp built from the ref.py math (jax.vjp of
-the oracle), so training through the kernels is exact w.r.t. Algorithm 1+2.
+Forward runs the batched Pallas kernels (one launch covers (b, m, d) via a
+leading batch grid axis). Backward is a custom_vjp wired to the
+flash-style Pallas backward kernels in soft_moe_kernels.py: dispatch and
+combine weights are recomputed tile-wise from the online-softmax
+``(max, denom)`` residuals, so no (m × S) logit/weight tensor ever exists
+in HBM on either direction — the ref.py math is reproduced exactly
+(gradients allclose), just never materialized.
+
+Residual layout per layer (see kernels/README.md):
+
+  routing: (x, phi_n, slots, d_mx, d_den)       — O(b·m·d + b·S·d + b·S)
+  combine: (x, phi_n, ys, c_mx, c_den, y)       — O(b·m·d + b·S·d + b·m)
+
+The combine stats flow forward from routing as an explicit output; their
+cotangent is identically zero (the softmax VJP's normalizer term is
+carried by the −σ/−ρ row corrections inside the backward kernels, exactly
+as flash attention treats its saved logsumexp), so both bwd rules drop it.
+
+Interpret policy: evaluated lazily per call via ``KernelConfig`` — never
+at import time (the seed's ``INTERPRET`` module global went stale if the
+backend was selected after import; see kernels/tuning.py).
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import ref
-from .soft_moe_kernels import combine_pallas, dispatch_pallas
+from .soft_moe_kernels import (
+    combine_apply_pallas,
+    combine_bwd_pallas,
+    combine_online_pallas,
+    dispatch_bwd_pallas,
+    routing_fwd_pallas,
+)
+from .tuning import KernelConfig, backend_is_tpu, default_config
 
-# CPU container: interpret mode. On TPU this flag flips to False.
-INTERPRET = jax.default_backend() != "tpu"
+
+def interpret_default() -> bool:
+    """Lazy per-call replacement for the old import-time INTERPRET global."""
+    return not backend_is_tpu()
 
 
-# -- dispatch ---------------------------------------------------------------
+def _resolve(config: Optional[KernelConfig], m: int, d: int,
+             s: int) -> KernelConfig:
+    if config is not None:
+        return config
+    return default_config(m, d, s)
 
 
-@jax.custom_vjp
-def soft_moe_dispatch(x, phi_n):
+# -- routing: dispatch output + combine stats in one logits pass ------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _routing(cfg: KernelConfig, x, phi_n):
+    slots, _d_stats, c_stats = routing_fwd_pallas(x, phi_n, cfg)
+    return slots, c_stats[0], c_stats[1]
+
+
+def _routing_fwd(cfg, x, phi_n):
+    slots, (d_mx, d_den), (c_mx, c_den) = routing_fwd_pallas(x, phi_n, cfg)
+    return (slots, c_mx, c_den), (x, phi_n, slots, d_mx, d_den)
+
+
+def _routing_bwd(cfg, res, g):
+    x, phi_n, slots, d_mx, d_den = res
+    g_slots, _g_cmx, _g_cden = g  # stats cotangents are identically zero
+    dx, dphi = dispatch_bwd_pallas(x, phi_n, g_slots, (d_mx, d_den), slots,
+                                   cfg)
+    return dx, dphi
+
+
+_routing.defvjp(_routing_fwd, _routing_bwd)
+
+
+def soft_moe_routing(x, phi_n, config: Optional[KernelConfig] = None
+                     ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """x: (b, m, d); phi_n: (d, S) pre-normalized.
+
+    Returns ``(slots, (c_mx, c_den))``: the dispatched slots (b, S, d) and
+    the combine-direction softmax stats (each (b, m)) from the same logits
+    pass — hand the stats to :func:`soft_moe_combine` to skip its online
+    rescan, and derive the ``max_combine`` metric as ``1 / c_den``.
+    """
+    b, m, d = x.shape
+    cfg = _resolve(config, m, d, phi_n.shape[1])
+    slots, c_mx, c_den = _routing(cfg, x, phi_n)
+    return slots, (c_mx, c_den)
+
+
+def soft_moe_dispatch(x, phi_n, config: Optional[KernelConfig] = None):
     """x: (b, m, d); phi_n: (d, S) pre-normalized -> slots (b, S, d)."""
-    return jax.vmap(lambda xs: dispatch_pallas(xs, phi_n,
-                                               interpret=INTERPRET))(x)
-
-
-def _dispatch_fwd(x, phi_n):
-    return soft_moe_dispatch(x, phi_n), (x, phi_n)
-
-
-def _dispatch_bwd(res, g):
-    x, phi_n = res
-    _, vjp = jax.vjp(lambda xx, pp: jax.vmap(
-        lambda xs: ref.dispatch_ref(xs, pp))(xx), x, phi_n)
-    return vjp(g)
-
-
-soft_moe_dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+    return soft_moe_routing(x, phi_n, config)[0]
 
 
 # -- combine ----------------------------------------------------------------
 
 
-@jax.custom_vjp
-def soft_moe_combine(x, phi_n, ys):
-    """x: (b, m, d); phi_n: (d, S); ys: (b, S, d) -> y (b, m, d)."""
-    return jax.vmap(
-        lambda xs, yss: combine_pallas(xs, phi_n, yss, interpret=INTERPRET)
-    )(x, ys)
+def _combine_bwd_impl(cfg, res, g):
+    x, phi_n, ys, c_mx, c_den, y = res
+    return combine_bwd_pallas(x, phi_n, ys, g, (c_mx, c_den), y, cfg)
 
 
-def _combine_fwd(x, phi_n, ys):
-    return soft_moe_combine(x, phi_n, ys), (x, phi_n, ys)
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _combine_stats(cfg: KernelConfig, x, phi_n, ys, c_mx, c_den):
+    return combine_apply_pallas(x, phi_n, ys, (c_mx, c_den), cfg)
 
 
-def _combine_bwd(res, g):
-    x, phi_n, ys = res
-    _, vjp = jax.vjp(
-        lambda xx, pp, yy: jax.vmap(
-            lambda xs, yss: ref.combine_ref(xs, pp, yss)
-        )(xx, yy),
-        x, phi_n, ys,
-    )
-    return vjp(g)
+def _combine_stats_fwd(cfg, x, phi_n, ys, c_mx, c_den):
+    y = combine_apply_pallas(x, phi_n, ys, (c_mx, c_den), cfg)
+    return y, (x, phi_n, ys, c_mx, c_den, y)
 
 
-soft_moe_combine.defvjp(_combine_fwd, _combine_bwd)
+def _combine_stats_bwd(cfg, res, g):
+    dx, dphi, dys = _combine_bwd_impl(cfg, res, g)
+    c_mx, c_den = res[3], res[4]
+    return dx, dphi, dys, jnp.zeros_like(c_mx), jnp.zeros_like(c_den)
+
+
+_combine_stats.defvjp(_combine_stats_fwd, _combine_stats_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _combine_online(cfg: KernelConfig, x, phi_n, ys):
+    return combine_online_pallas(x, phi_n, ys, cfg)[0]
+
+
+def _combine_online_fwd(cfg, x, phi_n, ys):
+    y, (c_mx, c_den) = combine_online_pallas(x, phi_n, ys, cfg)
+    return y, (x, phi_n, ys, c_mx, c_den, y)
+
+
+def _combine_online_bwd(cfg, res, g):
+    return _combine_bwd_impl(cfg, res, g)
+
+
+_combine_online.defvjp(_combine_online_fwd, _combine_online_bwd)
+
+
+def soft_moe_combine(x, phi_n, ys, c_stats=None,
+                     config: Optional[KernelConfig] = None):
+    """x: (b, m, d); phi_n: (d, S); ys: (b, S, d) -> y (b, m, d).
+
+    ``c_stats``: optional per-token (max, denom) from
+    :func:`soft_moe_routing` — skips the online-softmax rescan (the
+    shared-logits path). Without it the kernel derives its own stats.
+    """
+    b, m, d = x.shape
+    cfg = _resolve(config, m, d, phi_n.shape[1])
+    if c_stats is None:
+        return _combine_online(cfg, x, phi_n, ys)
+    c_mx, c_den = c_stats
+    return _combine_stats(cfg, x, phi_n, ys, c_mx, c_den)
 
 
 # -- full layer helper (used by core.soft_moe) -------------------------------

@@ -1,31 +1,60 @@
-"""Fused Soft-MoE dispatch/combine Pallas TPU kernels.
+"""Fused Soft-MoE routing Pallas TPU kernels — forward AND backward.
 
 Why a kernel: the jnp path materializes the (m × S) logits in HBM *twice*
 (once per softmax direction) plus the two weight tensors — at B/16 scale
 (m=4096 tokens, S=4096 slots) that is 4 × 64MB of HBM traffic per layer
-per sequence that never needs to exist. Both kernels below stream over the
-contraction dimension with an online softmax (the flash-attention
-rescaling trick applied to the paper's two softmax directions) and keep
-only (block × d) tiles resident in VMEM:
+per sequence that never needs to exist. Every kernel below streams over
+the contraction dimension and keeps only (block × d) tiles resident in
+VMEM; the (m × S) logits/weights exist only tile-wise, never in HBM.
 
-  * dispatch: for each slot block, stream token blocks; online-softmax
-    over TOKENS (the D direction) while accumulating the slot mix
-    X~ = D^T X in the same pass. Logits never touch HBM.
-  * combine: for each token block, stream slot blocks; online-softmax
-    over SLOTS (the C direction) while accumulating Y = C Ys.
+Forward (single-pass shared logits):
+
+  * ``routing_fwd``: ONE logits pass produces the dispatch output and both
+    softmax directions' statistics. For each slot block it streams token
+    blocks, runs the online softmax over TOKENS (the D direction) while
+    accumulating the slot mix X~ = DᵀX, and folds the same logits tile
+    into running per-token (max, denom) over SLOTS (the C direction).
+    The seed kernels computed the identical ``l2norm(X) @ Phi_n`` product
+    twice (once in dispatch, once in combine) just to derive each
+    direction's statistics — the statistics matmul work is halved.
+  * ``combine_apply``: consumes the saved per-token (max, denom), so it
+    re-materializes exp-logit tiles with **no online rescaling** and
+    weights the expert outputs: Y = C Ys.
+  * ``combine_online``: standalone combine (no precomputed stats) that
+    additionally EMITS its final (max, denom) — the backward residuals.
+
+Backward (flash-style, the dq/dkv split of flash attention): logits tiles
+are recomputed from the saved online-softmax ``(max, denom)`` residuals —
+O(m + S) floats per direction instead of the (m × S) softmax re-derivation
+``jax.vjp``-of-ref would do. Softmax VJP per direction:
+
+  dispatch  dL = D ⊙ (dD − σ),  σ_s = g_s · X~_s        (rowdot of grads
+  combine   dL = C ⊙ (dC − ρ),  ρ_i = g_i · Y_i          and fwd outputs)
+
+  * ``dispatch_bwd_dx`` / ``combine_bwd_dx``: token-block major, slot
+    blocks inner; accumulate dX (plus the raw D·g term and the l2-norm
+    chain applied once at the end of the row of blocks).
+  * ``dispatch_bwd_dphi`` / ``combine_bwd_dys_dphi``: slot-block major
+    OUTERMOST with (batch, token) inner so the dPhi tile accumulates over
+    batch AND tokens in consecutive grid steps (one VMEM-resident
+    accumulator, one HBM write per slot block).
+
+Batching: one kernel launch covers (b, m, d) via a leading batch grid
+axis (no ``jax.vmap`` over ``pallas_call``); the phi tile's index map
+ignores the batch axis, so phi blocks are fetched once and reused across
+the batch.
 
 Tiling: d stays whole inside a block (the dot needs full rows); token and
-slot tiles default to 128 — minor dims are multiples of 128 for MXU
-alignment. VMEM at d=8192, bt=bs=128, f32 accumulators:
-x-tile 4MB + phi-tile 4MB + acc 4MB + O(128) vectors ≈ 12MB < 16MB/core.
+slot block sizes come from ``tuning.KernelConfig`` (defaults 128 — minor
+dims multiples of 128 for MXU alignment). See ``kernels/README.md`` for
+the VMEM budget per kernel, the residual layout, and a block-size table.
 
 Phi arrives pre-normalized (scale * l2norm(phi) is O(d·S), done once
 outside); X is l2-normalized inside the kernel (it is re-read every pass —
 normalizing outside would double-read X from HBM).
 
 Validated in interpret mode against ref.py (CPU has no MXU; TPU is the
-target). Backward = custom_vjp with the ref-math VJP (kernels are
-forward-optimized; the bwd einsums are already MXU-friendly XLA).
+target), forward allclose and gradients allclose to the ref VJP.
 """
 from __future__ import annotations
 
@@ -36,156 +65,556 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .tuning import KernelConfig
+
 _NEG = -1e30
+_EPS = 1e-6  # must match ref.l2_normalize
 
 
-def _l2n(x, eps=1e-6):
+def _l2n(x, eps=_EPS):
     norm = jnp.sqrt(jnp.sum(jnp.square(x), axis=1, keepdims=True))
     return x * (1.0 / (norm + eps))
 
 
+def _dot(a, b, dims, dt):
+    return jax.lax.dot_general(a, b, (dims, ((), ())),
+                               preferred_element_type=dt)
+
+
+def _logits_tile(x_ref, phi_ref, dt):
+    """(x block, phi block) -> (raw x, l2norm x, logits) tiles in acc dtype."""
+    x = x_ref[0].astype(dt)  # (bt, d)
+    xn = _l2n(x)
+    phi = phi_ref[...].astype(dt)  # (d, bs)
+    logits = _dot(xn, phi, ((1,), (0,)), dt)  # (bt, bs)
+    return x, xn, logits
+
+
+def _l2n_bwd(x, dxn, dt):
+    """VJP of _l2n at raw-token tile x: dX given d(l2norm X)."""
+    n = jnp.sqrt(jnp.sum(jnp.square(x), axis=1))  # (bt,)
+    r = 1.0 / (n + _EPS)
+    inv_n = jnp.where(n > 0, 1.0 / jnp.maximum(n, _EPS), jnp.zeros_like(n))
+    proj = jnp.sum(x * dxn, axis=1)  # (bt,)
+    return r[:, None] * dxn - (r * r * inv_n * proj)[:, None] * x
+
+
+def _pad_to(x, size, axis, value=0.0):
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _grid_sizes(m, s, cfg: KernelConfig):
+    bt, bs = cfg.block_tokens, cfg.block_slots
+    return bt, bs, pl.cdiv(m, bt) * bt, pl.cdiv(s, bs) * bs
+
+
 # ---------------------------------------------------------------------------
-# dispatch: slots = D^T X, D = softmax over tokens
+# forward: single-pass routing (dispatch output + both directions' stats)
 # ---------------------------------------------------------------------------
 
 
-def _dispatch_kernel(x_ref, phi_ref, out_ref, acc, mx, den, *, m_valid, bt):
-    jt = pl.program_id(1)
-    nt = pl.num_programs(1)
+def _routing_fwd_kernel(x_ref, phi_ref, slots_ref, dmx_ref, dden_ref,
+                        cmx_ref, cden_ref, acc, smx, sden, cmx_all, cden_all,
+                        *, m_valid, s_valid, bt, bs, dt):
+    js, jt = pl.program_id(1), pl.program_id(2)
+    nt = pl.num_programs(2)
 
     @pl.when(jt == 0)
-    def _init():
+    def _init_slot_block():
         acc[...] = jnp.zeros_like(acc)
-        mx[...] = jnp.full_like(mx, _NEG)
-        den[...] = jnp.zeros_like(den)
+        smx[...] = jnp.full_like(smx, _NEG)
+        sden[...] = jnp.zeros_like(sden)
 
-    x = x_ref[...].astype(jnp.float32)  # (bt, d) raw
-    xn = _l2n(x)
-    phi = phi_ref[...].astype(jnp.float32)  # (d, bs)
-    logits = jax.lax.dot_general(
-        xn, phi, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )  # (bt, bs)
-    # mask padded token rows (last block may be ragged)
+    tok = pl.ds(jt * bt, bt)
+
+    @pl.when(js == 0)
+    def _init_token_stats():
+        cmx_all[tok] = jnp.full((bt,), _NEG, dt)
+        cden_all[tok] = jnp.zeros((bt,), dt)
+
+    x, _xn, logits = _logits_tile(x_ref, phi_ref, dt)
     row = jt * bt + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
-    logits = jnp.where(row < m_valid, logits, _NEG)
+    col = js * bs + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    lg_d = jnp.where(row < m_valid, logits, _NEG)  # dispatch: mask pad tokens
+    lg_c = jnp.where(col < s_valid, logits, _NEG)  # combine: mask pad slots
 
-    m_old = mx[...]
-    m_new = jnp.maximum(m_old, logits.max(axis=0))  # (bs,)
+    # dispatch direction: online softmax over tokens (inner jt loop)
+    m_old = smx[...]
+    m_new = jnp.maximum(m_old, lg_d.max(axis=0))  # (bs,)
     corr = jnp.exp(m_old - m_new)
-    p = jnp.exp(logits - m_new[None, :])  # (bt, bs)
-    den[...] = den[...] * corr + p.sum(axis=0)
-    # acc: (bs, d) += p^T @ x   (raw x — the paper mixes unnormalized tokens)
-    acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
-        p, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
-    mx[...] = m_new
+    p = jnp.exp(lg_d - m_new[None, :])  # (bt, bs)
+    sden[...] = sden[...] * corr + p.sum(axis=0)
+    # acc: (bs, d) += pᵀ @ x  (raw x — the paper mixes unnormalized tokens)
+    acc[...] = acc[...] * corr[:, None] + _dot(p, x, ((0,), (0,)), dt)
+    smx[...] = m_new
+
+    # combine direction: online (max, denom) over slots (outer js loop);
+    # running values land in the full-length O(m) scratch and are written
+    # out every visit (the (jb, jt) output block is revisited per js, so
+    # the buffer cannot be trusted to persist — last write wins).
+    cm_old = cmx_all[tok]
+    cm_new = jnp.maximum(cm_old, lg_c.max(axis=1))  # (bt,)
+    ccorr = jnp.exp(cm_old - cm_new)
+    cden_new = cden_all[tok] * ccorr + jnp.exp(
+        lg_c - cm_new[:, None]).sum(axis=1)
+    cmx_all[tok] = cm_new
+    cden_all[tok] = cden_new
+    cmx_ref[0] = cm_new.astype(cmx_ref.dtype)
+    cden_ref[0] = cden_new.astype(cden_ref.dtype)
 
     @pl.when(jt == nt - 1)
-    def _finish():
-        out_ref[...] = (acc[...] / den[...][:, None]).astype(out_ref.dtype)
+    def _finish_slot_block():
+        slots_ref[0] = (acc[...] / sden[...][:, None]).astype(slots_ref.dtype)
+        dmx_ref[0] = smx[...].astype(dmx_ref.dtype)
+        dden_ref[0] = sden[...].astype(dden_ref.dtype)
 
 
-def dispatch_pallas(x, phi_n, *, bt: int = 128, bs: int = 128,
-                    interpret: bool = True):
-    """x: (m, d); phi_n: (d, S) pre-normalized. Returns slots (S, d)."""
-    m, d = x.shape
+def routing_fwd_pallas(x, phi_n, cfg: KernelConfig = KernelConfig()):
+    """x: (b, m, d); phi_n: (d, S) pre-normalized.
+
+    Returns ``(slots, (d_mx, d_den), (c_mx, c_den))`` with slots (b, S, d),
+    dispatch stats (b, S) and combine stats (b, m) — one logits pass.
+    """
+    b, m, d = x.shape
     s = phi_n.shape[1]
-    m_pad = pl.cdiv(m, bt) * bt
-    s_pad = pl.cdiv(s, bs) * bs
-    if m_pad != m:
-        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
-    if s_pad != s:
-        phi_n = jnp.pad(phi_n, ((0, 0), (0, s_pad - s)))
-    grid = (s_pad // bs, m_pad // bt)
-    out = pl.pallas_call(
-        functools.partial(_dispatch_kernel, m_valid=m, bt=bt),
+    bt, bs, m_pad, s_pad = _grid_sizes(m, s, cfg)
+    dt = cfg.acc()
+    x = _pad_to(x, m_pad, axis=1)
+    phi_n = _pad_to(phi_n, s_pad, axis=1)
+    grid = (b, s_pad // bs, m_pad // bt)
+    out_shapes = (
+        jax.ShapeDtypeStruct((b, s_pad, d), x.dtype),  # slots
+        jax.ShapeDtypeStruct((b, s_pad), dt),  # dispatch max
+        jax.ShapeDtypeStruct((b, s_pad), dt),  # dispatch denom
+        jax.ShapeDtypeStruct((b, m_pad), dt),  # combine max
+        jax.ShapeDtypeStruct((b, m_pad), dt),  # combine denom
+    )
+    slots, dmx, dden, cmx, cden = pl.pallas_call(
+        functools.partial(_routing_fwd_kernel, m_valid=m, s_valid=s,
+                          bt=bt, bs=bs, dt=dt),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bt, d), lambda js, jt: (jt, 0)),
-            pl.BlockSpec((d, bs), lambda js, jt: (0, js)),
+            pl.BlockSpec((1, bt, d), lambda jb, js, jt: (jb, jt, 0)),
+            pl.BlockSpec((d, bs), lambda jb, js, jt: (0, js)),
         ],
-        out_specs=pl.BlockSpec((bs, d), lambda js, jt: (js, 0)),
-        out_shape=jax.ShapeDtypeStruct((s_pad, d), x.dtype),
+        out_specs=(
+            pl.BlockSpec((1, bs, d), lambda jb, js, jt: (jb, js, 0)),
+            pl.BlockSpec((1, bs), lambda jb, js, jt: (jb, js)),
+            pl.BlockSpec((1, bs), lambda jb, js, jt: (jb, js)),
+            pl.BlockSpec((1, bt), lambda jb, js, jt: (jb, jt)),
+            pl.BlockSpec((1, bt), lambda jb, js, jt: (jb, jt)),
+        ),
+        out_shape=out_shapes,
         scratch_shapes=[
-            pltpu.VMEM((bs, d), jnp.float32),  # acc: slot mix
-            pltpu.VMEM((bs,), jnp.float32),  # running max
-            pltpu.VMEM((bs,), jnp.float32),  # running denom
+            pltpu.VMEM((bs, d), dt),  # slot-mix accumulator
+            pltpu.VMEM((bs,), dt),  # dispatch running max
+            pltpu.VMEM((bs,), dt),  # dispatch running denom
+            pltpu.VMEM((m_pad,), dt),  # combine running max (all tokens)
+            pltpu.VMEM((m_pad,), dt),  # combine running denom (all tokens)
         ],
-        interpret=interpret,
+        interpret=cfg.resolve_interpret(),
     )(x, phi_n)
-    return out[:s]
+    return (slots[:, :s], (dmx[:, :s], dden[:, :s]),
+            (cmx[:, :m], cden[:, :m]))
 
 
 # ---------------------------------------------------------------------------
-# combine: y = C Ys, C = softmax over slots
+# forward: combine  y = C Ys   (stats-given and online variants)
 # ---------------------------------------------------------------------------
 
 
-def _combine_kernel(x_ref, phi_ref, ys_ref, out_ref, acc, mx, den,
-                    *, s_valid, bs):
-    js = pl.program_id(1)
-    ns = pl.num_programs(1)
+def _combine_kernel(x_ref, phi_ref, ys_ref, cmx_ref, cden_ref, out_ref,
+                    *rest, s_valid, bs, dt, online):
+    if online:  # emits final stats instead of consuming them
+        out_ref, cmx_out, cden_out = cmx_ref, cden_ref, out_ref
+        acc, mx, den = rest
+    else:
+        (acc,) = rest
+    js = pl.program_id(2)
+    ns = pl.num_programs(2)
 
     @pl.when(js == 0)
     def _init():
         acc[...] = jnp.zeros_like(acc)
-        mx[...] = jnp.full_like(mx, _NEG)
-        den[...] = jnp.zeros_like(den)
+        if online:
+            mx[...] = jnp.full_like(mx, _NEG)
+            den[...] = jnp.zeros_like(den)
 
-    xn = _l2n(x_ref[...].astype(jnp.float32))  # (bt, d)
-    phi = phi_ref[...].astype(jnp.float32)  # (d, bs)
-    ys = ys_ref[...].astype(jnp.float32)  # (bs, d)
-    logits = jax.lax.dot_general(
-        xn, phi, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )  # (bt, bs)
+    _x, _xn, logits = _logits_tile(x_ref, phi_ref, dt)
     col = js * bs + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
-    logits = jnp.where(col < s_valid, logits, _NEG)
+    lg_c = jnp.where(col < s_valid, logits, _NEG)
+    ys = ys_ref[0].astype(dt)  # (bs, d)
 
-    m_old = mx[...]
-    m_new = jnp.maximum(m_old, logits.max(axis=1))  # (bt,)
-    corr = jnp.exp(m_old - m_new)
-    p = jnp.exp(logits - m_new[:, None])
-    den[...] = den[...] * corr + p.sum(axis=1)
-    acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
-        p, ys, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
-    mx[...] = m_new
+    if online:
+        m_old = mx[...]
+        m_new = jnp.maximum(m_old, lg_c.max(axis=1))  # (bt,)
+        corr = jnp.exp(m_old - m_new)
+        p = jnp.exp(lg_c - m_new[:, None])
+        den[...] = den[...] * corr + p.sum(axis=1)
+        acc[...] = acc[...] * corr[:, None] + _dot(p, ys, ((1,), (0,)), dt)
+        mx[...] = m_new
+    else:
+        # exact final (max, denom) saved by routing_fwd: p ≤ 1, no rescale
+        p = jnp.exp(lg_c - cmx_ref[0][:, None])
+        acc[...] = acc[...] + _dot(p, ys, ((1,), (0,)), dt)
 
     @pl.when(js == ns - 1)
     def _finish():
-        out_ref[...] = (acc[...] / den[...][:, None]).astype(out_ref.dtype)
+        d_final = den[...] if online else cden_ref[0].astype(dt)
+        out_ref[0] = (acc[...] / d_final[:, None]).astype(out_ref.dtype)
+        if online:
+            cmx_out[0] = mx[...].astype(cmx_out.dtype)
+            cden_out[0] = den[...].astype(cden_out.dtype)
+
+
+def _combine_call(x, phi_n, ys, c_stats, cfg: KernelConfig):
+    b, m, d = x.shape
+    s = phi_n.shape[1]
+    bt, bs, m_pad, s_pad = _grid_sizes(m, s, cfg)
+    dt = cfg.acc()
+    online = c_stats is None
+    x = _pad_to(x, m_pad, axis=1)
+    phi_n = _pad_to(phi_n, s_pad, axis=1)
+    ys = _pad_to(ys, s_pad, axis=1)
+    grid = (b, m_pad // bt, s_pad // bs)
+    in_specs = [
+        pl.BlockSpec((1, bt, d), lambda jb, jt, js: (jb, jt, 0)),
+        pl.BlockSpec((d, bs), lambda jb, jt, js: (0, js)),
+        pl.BlockSpec((1, bs, d), lambda jb, jt, js: (jb, js, 0)),
+    ]
+    stat_spec = pl.BlockSpec((1, bt), lambda jb, jt, js: (jb, jt))
+    y_spec = pl.BlockSpec((1, bt, d), lambda jb, jt, js: (jb, jt, 0))
+    y_shape = jax.ShapeDtypeStruct((b, m_pad, d), x.dtype)
+    if online:
+        out = pl.pallas_call(
+            functools.partial(_combine_kernel, s_valid=s, bs=bs, dt=dt,
+                              online=True),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=(y_spec, stat_spec, stat_spec),
+            out_shape=(y_shape,
+                       jax.ShapeDtypeStruct((b, m_pad), dt),
+                       jax.ShapeDtypeStruct((b, m_pad), dt)),
+            scratch_shapes=[
+                pltpu.VMEM((bt, d), dt),
+                pltpu.VMEM((bt,), dt),
+                pltpu.VMEM((bt,), dt),
+            ],
+            interpret=cfg.resolve_interpret(),
+        )(x, phi_n, ys)
+        y, cmx, cden = out
+        return y[:, :m], (cmx[:, :m], cden[:, :m])
+    cmx, cden = c_stats
+    cmx = _pad_to(cmx.astype(dt), m_pad, axis=1)
+    cden = _pad_to(cden.astype(dt), m_pad, axis=1, value=1.0)
+    y = pl.pallas_call(
+        functools.partial(_combine_kernel, s_valid=s, bs=bs, dt=dt,
+                          online=False),
+        grid=grid,
+        in_specs=in_specs + [stat_spec, stat_spec],
+        out_specs=y_spec,
+        out_shape=y_shape,
+        scratch_shapes=[pltpu.VMEM((bt, d), dt)],
+        interpret=cfg.resolve_interpret(),
+    )(x, phi_n, ys, cmx, cden)
+    return y[:, :m], c_stats
+
+
+def combine_apply_pallas(x, phi_n, ys, c_stats,
+                         cfg: KernelConfig = KernelConfig()):
+    """Combine with precomputed per-token stats from routing_fwd."""
+    return _combine_call(x, phi_n, ys, c_stats, cfg)[0]
+
+
+def combine_online_pallas(x, phi_n, ys, cfg: KernelConfig = KernelConfig()):
+    """Standalone combine; returns (y, (c_mx, c_den)) — stats are the
+    backward residuals."""
+    return _combine_call(x, phi_n, ys, None, cfg)
+
+
+# ---------------------------------------------------------------------------
+# backward: dispatch  (dX token-major; dPhi slot-major)
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_bwd_tile(x_ref, phi_ref, g_ref, dmx_ref, dden_ref, sig_ref,
+                       *, jt, m_valid, bt, dt):
+    """Shared tile math: recompute D from residual stats, softmax-VJP."""
+    x, xn, logits = _logits_tile(x_ref, phi_ref, dt)
+    row = jt * bt + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+    lg_d = jnp.where(row < m_valid, logits, _NEG)
+    d_w = jnp.exp(lg_d - dmx_ref[0][None, :]) / dden_ref[0][None, :]
+    g = g_ref[0].astype(dt)  # (bs, d)
+    d_dw = _dot(x, g, ((1,), (1,)), dt)  # (bt, bs) = x · g_s
+    d_lg = d_w * (d_dw - sig_ref[0][None, :])
+    return x, xn, d_w, d_lg, g
+
+
+def _dispatch_bwd_dx_kernel(x_ref, phi_ref, g_ref, dmx_ref, dden_ref,
+                            sig_ref, dx_ref, acc_raw, acc_n,
+                            *, m_valid, bt, dt):
+    jt, js = pl.program_id(1), pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(js == 0)
+    def _init():
+        acc_raw[...] = jnp.zeros_like(acc_raw)
+        acc_n[...] = jnp.zeros_like(acc_n)
+
+    x, _xn, d_w, d_lg, g = _dispatch_bwd_tile(
+        x_ref, phi_ref, g_ref, dmx_ref, dden_ref, sig_ref,
+        jt=jt, m_valid=m_valid, bt=bt, dt=dt)
+    acc_raw[...] = acc_raw[...] + _dot(d_w, g, ((1,), (0,)), dt)  # D @ g
+    phi = phi_ref[...].astype(dt)
+    acc_n[...] = acc_n[...] + _dot(d_lg, phi, ((1,), (1,)), dt)  # dL @ phiᵀ
+
+    @pl.when(js == ns - 1)
+    def _finish():
+        dx = acc_raw[...] + _l2n_bwd(x, acc_n[...], dt)
+        dx_ref[0] = dx.astype(dx_ref.dtype)
+
+
+def _dispatch_bwd_dphi_kernel(x_ref, phi_ref, g_ref, dmx_ref, dden_ref,
+                              sig_ref, dphi_ref, acc_p, *, m_valid, bt, dt):
+    jb, jt = pl.program_id(1), pl.program_id(2)
+    nb, nt = pl.num_programs(1), pl.num_programs(2)
+
+    @pl.when((jb == 0) & (jt == 0))
+    def _init():
+        acc_p[...] = jnp.zeros_like(acc_p)
+
+    _x, xn, _d_w, d_lg, _g = _dispatch_bwd_tile(
+        x_ref, phi_ref, g_ref, dmx_ref, dden_ref, sig_ref,
+        jt=jt, m_valid=m_valid, bt=bt, dt=dt)
+    acc_p[...] = acc_p[...] + _dot(xn, d_lg, ((0,), (0,)), dt)  # xnᵀ @ dL
+
+    @pl.when((jb == nb - 1) & (jt == nt - 1))
+    def _finish():
+        dphi_ref[...] = acc_p[...].astype(dphi_ref.dtype)
+
+
+def dispatch_bwd_pallas(x, phi_n, g_slots, d_stats, slots,
+                        cfg: KernelConfig = KernelConfig()):
+    """Flash backward of routing/dispatch. Returns (dx, dphi_n).
+
+    x: (b, m, d); phi_n: (d, S); g_slots/slots: (b, S, d);
+    d_stats: per-slot (max, denom), each (b, S).
+    """
+    b, m, d = x.shape
+    s = phi_n.shape[1]
+    bt, bs, m_pad, s_pad = _grid_sizes(m, s, cfg)
+    dt = cfg.acc()
+    dmx, dden = d_stats
+    # σ_s = g_s · X~_s — the dispatch softmax-VJP row term, O(S·d) outside
+    # the kernel (never (m × S)).
+    sigma = jnp.sum(g_slots.astype(dt) * slots.astype(dt), axis=-1)  # (b, S)
+    x_p = _pad_to(x, m_pad, axis=1)
+    phi_p = _pad_to(phi_n, s_pad, axis=1)
+    g_p = _pad_to(g_slots, s_pad, axis=1)
+    # pad stats with (max=0, denom=1): padded-column D tiles stay finite and
+    # are multiplied only by zero-padded g/σ, so they never contribute.
+    dmx_p = _pad_to(dmx.astype(dt), s_pad, axis=1)
+    dden_p = _pad_to(dden.astype(dt), s_pad, axis=1, value=1.0)
+    sig_p = _pad_to(sigma, s_pad, axis=1)
+    args = (x_p, phi_p, g_p, dmx_p, dden_p, sig_p)
+
+    x_spec_t = pl.BlockSpec((1, bt, d), lambda jb, jt, js: (jb, jt, 0))
+    sstat_t = pl.BlockSpec((1, bs), lambda jb, jt, js: (jb, js))
+    dx = pl.pallas_call(
+        functools.partial(_dispatch_bwd_dx_kernel, m_valid=m, bt=bt, dt=dt),
+        grid=(b, m_pad // bt, s_pad // bs),
+        in_specs=[
+            x_spec_t,
+            pl.BlockSpec((d, bs), lambda jb, jt, js: (0, js)),
+            pl.BlockSpec((1, bs, d), lambda jb, jt, js: (jb, js, 0)),
+            sstat_t, sstat_t, sstat_t,
+        ],
+        out_specs=x_spec_t,
+        out_shape=jax.ShapeDtypeStruct((b, m_pad, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, d), dt), pltpu.VMEM((bt, d), dt)],
+        interpret=cfg.resolve_interpret(),
+    )(*args)
+
+    sstat_s = pl.BlockSpec((1, bs), lambda js, jb, jt: (jb, js))
+    dphi = pl.pallas_call(
+        functools.partial(_dispatch_bwd_dphi_kernel, m_valid=m, bt=bt, dt=dt),
+        grid=(s_pad // bs, b, m_pad // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt, d), lambda js, jb, jt: (jb, jt, 0)),
+            pl.BlockSpec((d, bs), lambda js, jb, jt: (0, js)),
+            pl.BlockSpec((1, bs, d), lambda js, jb, jt: (jb, js, 0)),
+            sstat_s, sstat_s, sstat_s,
+        ],
+        out_specs=pl.BlockSpec((d, bs), lambda js, jb, jt: (0, js)),
+        out_shape=jax.ShapeDtypeStruct((d, s_pad), phi_n.dtype),
+        scratch_shapes=[pltpu.VMEM((d, bs), dt)],
+        interpret=cfg.resolve_interpret(),
+    )(*args)
+    return dx[:, :m], dphi[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# backward: combine  (dX token-major; dYs + dPhi slot-major)
+# ---------------------------------------------------------------------------
+
+
+def _combine_bwd_tile(x_ref, phi_ref, ys_ref, g_ref, cmx_ref, cden_ref,
+                      rho_ref, *, js, s_valid, bs, dt):
+    """Shared tile math: recompute C from residual stats, softmax-VJP."""
+    _x, xn, logits = _logits_tile(x_ref, phi_ref, dt)
+    col = js * bs + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    lg_c = jnp.where(col < s_valid, logits, _NEG)
+    c_w = jnp.exp(lg_c - cmx_ref[0][:, None]) / cden_ref[0][:, None]
+    g = g_ref[0].astype(dt)  # (bt, d)
+    ys = ys_ref[0].astype(dt)  # (bs, d)
+    d_cw = _dot(g, ys, ((1,), (1,)), dt)  # (bt, bs) = g_i · ys_s
+    d_lg = c_w * (d_cw - rho_ref[0][:, None])
+    return xn, c_w, d_lg, g
+
+
+def _combine_bwd_dx_kernel(x_ref, phi_ref, ys_ref, g_ref, cmx_ref, cden_ref,
+                           rho_ref, dx_ref, acc_n, *, s_valid, bs, dt):
+    js = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(js == 0)
+    def _init():
+        acc_n[...] = jnp.zeros_like(acc_n)
+
+    _xn, _c_w, d_lg, _g = _combine_bwd_tile(
+        x_ref, phi_ref, ys_ref, g_ref, cmx_ref, cden_ref, rho_ref,
+        js=js, s_valid=s_valid, bs=bs, dt=dt)
+    phi = phi_ref[...].astype(dt)
+    acc_n[...] = acc_n[...] + _dot(d_lg, phi, ((1,), (1,)), dt)
+
+    @pl.when(js == ns - 1)
+    def _finish():
+        x = x_ref[0].astype(dt)
+        dx_ref[0] = _l2n_bwd(x, acc_n[...], dt).astype(dx_ref.dtype)
+
+
+def _combine_bwd_dys_dphi_kernel(x_ref, phi_ref, ys_ref, g_ref, cmx_ref,
+                                 cden_ref, rho_ref, dys_ref, dphi_ref,
+                                 acc_y, acc_p, *, s_valid, bs, dt):
+    js, jb, jt = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    nb, nt = pl.num_programs(1), pl.num_programs(2)
+
+    @pl.when(jt == 0)
+    def _init_dys():
+        acc_y[...] = jnp.zeros_like(acc_y)
+
+    @pl.when((jb == 0) & (jt == 0))
+    def _init_dphi():
+        acc_p[...] = jnp.zeros_like(acc_p)
+
+    xn, c_w, d_lg, g = _combine_bwd_tile(
+        x_ref, phi_ref, ys_ref, g_ref, cmx_ref, cden_ref, rho_ref,
+        js=js, s_valid=s_valid, bs=bs, dt=dt)
+    acc_y[...] = acc_y[...] + _dot(c_w, g, ((0,), (0,)), dt)  # Cᵀ @ g
+    acc_p[...] = acc_p[...] + _dot(xn, d_lg, ((0,), (0,)), dt)  # xnᵀ @ dL
+
+    @pl.when(jt == nt - 1)
+    def _finish_dys():
+        dys_ref[0] = acc_y[...].astype(dys_ref.dtype)
+
+    @pl.when((jb == nb - 1) & (jt == nt - 1))
+    def _finish_dphi():
+        dphi_ref[...] = acc_p[...].astype(dphi_ref.dtype)
+
+
+def combine_bwd_pallas(x, phi_n, ys, g, c_stats, y,
+                       cfg: KernelConfig = KernelConfig()):
+    """Flash backward of combine. Returns (dx, dphi_n, dys).
+
+    x/g/y: (b, m, d); phi_n: (d, S); ys: (b, S, d);
+    c_stats: per-token (max, denom), each (b, m).
+    """
+    b, m, d = x.shape
+    s = phi_n.shape[1]
+    bt, bs, m_pad, s_pad = _grid_sizes(m, s, cfg)
+    dt = cfg.acc()
+    cmx, cden = c_stats
+    # ρ_i = g_i · Y_i — the combine softmax-VJP row term, O(m·d) outside.
+    rho = jnp.sum(g.astype(dt) * y.astype(dt), axis=-1)  # (b, m)
+    x_p = _pad_to(x, m_pad, axis=1)
+    phi_p = _pad_to(phi_n, s_pad, axis=1)
+    ys_p = _pad_to(ys, s_pad, axis=1)
+    g_p = _pad_to(g, m_pad, axis=1)
+    # (max=0, denom=1) padding keeps padded-row C tiles finite; they meet
+    # only zero-padded g/ρ rows, so dL and every accumulator stay exact.
+    cmx_p = _pad_to(cmx.astype(dt), m_pad, axis=1)
+    cden_p = _pad_to(cden.astype(dt), m_pad, axis=1, value=1.0)
+    rho_p = _pad_to(rho, m_pad, axis=1)
+    args = (x_p, phi_p, ys_p, g_p, cmx_p, cden_p, rho_p)
+
+    x_spec_t = pl.BlockSpec((1, bt, d), lambda jb, jt, js: (jb, jt, 0))
+    tstat_t = pl.BlockSpec((1, bt), lambda jb, jt, js: (jb, jt))
+    dx = pl.pallas_call(
+        functools.partial(_combine_bwd_dx_kernel, s_valid=s, bs=bs, dt=dt),
+        grid=(b, m_pad // bt, s_pad // bs),
+        in_specs=[
+            x_spec_t,
+            pl.BlockSpec((d, bs), lambda jb, jt, js: (0, js)),
+            pl.BlockSpec((1, bs, d), lambda jb, jt, js: (jb, js, 0)),
+            x_spec_t, tstat_t, tstat_t, tstat_t,
+        ],
+        out_specs=x_spec_t,
+        out_shape=jax.ShapeDtypeStruct((b, m_pad, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, d), dt)],
+        interpret=cfg.resolve_interpret(),
+    )(*args)
+
+    x_spec_s = pl.BlockSpec((1, bt, d), lambda js, jb, jt: (jb, jt, 0))
+    tstat_s = pl.BlockSpec((1, bt), lambda js, jb, jt: (jb, jt))
+    dys, dphi = pl.pallas_call(
+        functools.partial(_combine_bwd_dys_dphi_kernel, s_valid=s, bs=bs,
+                          dt=dt),
+        grid=(s_pad // bs, b, m_pad // bt),
+        in_specs=[
+            x_spec_s,
+            pl.BlockSpec((d, bs), lambda js, jb, jt: (0, js)),
+            pl.BlockSpec((1, bs, d), lambda js, jb, jt: (jb, js, 0)),
+            x_spec_s, tstat_s, tstat_s, tstat_s,
+        ],
+        out_specs=(
+            pl.BlockSpec((1, bs, d), lambda js, jb, jt: (jb, js, 0)),
+            pl.BlockSpec((d, bs), lambda js, jb, jt: (0, js)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, s_pad, d), ys.dtype),
+            jax.ShapeDtypeStruct((d, s_pad), phi_n.dtype),
+        ),
+        scratch_shapes=[pltpu.VMEM((bs, d), dt), pltpu.VMEM((d, bs), dt)],
+        interpret=cfg.resolve_interpret(),
+    )(*args)
+    return dx[:, :m], dphi[:, :s], dys[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# single-sequence back-compat wrappers (2D in / 2D out)
+# ---------------------------------------------------------------------------
+
+
+def _cfg_2d(bt, bs, interpret):
+    return KernelConfig(block_tokens=bt, block_slots=bs, interpret=interpret)
+
+
+def dispatch_pallas(x, phi_n, *, bt: int = 128, bs: int = 128,
+                    interpret=None):
+    """x: (m, d); phi_n: (d, S) pre-normalized. Returns slots (S, d)."""
+    slots, _, _ = routing_fwd_pallas(x[None], phi_n, _cfg_2d(bt, bs,
+                                                             interpret))
+    return slots[0]
 
 
 def combine_pallas(x, phi_n, ys, *, bt: int = 128, bs: int = 128,
-                   interpret: bool = True):
+                   interpret=None):
     """x: (m, d); phi_n: (d, S); ys: (S, d) expert outputs -> y (m, d)."""
-    m, d = x.shape
-    s = phi_n.shape[1]
-    m_pad = pl.cdiv(m, bt) * bt
-    s_pad = pl.cdiv(s, bs) * bs
-    if m_pad != m:
-        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
-    if s_pad != s:
-        phi_n = jnp.pad(phi_n, ((0, 0), (0, s_pad - s)))
-        ys = jnp.pad(ys, ((0, s_pad - s), (0, 0)))
-    grid = (m_pad // bt, s_pad // bs)
-    out = pl.pallas_call(
-        functools.partial(_combine_kernel, s_valid=s, bs=bs),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bt, d), lambda jt, js: (jt, 0)),
-            pl.BlockSpec((d, bs), lambda jt, js: (0, js)),
-            pl.BlockSpec((bs, d), lambda jt, js: (js, 0)),
-        ],
-        out_specs=pl.BlockSpec((bt, d), lambda jt, js: (jt, 0)),
-        out_shape=jax.ShapeDtypeStruct((m_pad, d), x.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bt, d), jnp.float32),  # acc: combined output
-            pltpu.VMEM((bt,), jnp.float32),  # running max
-            pltpu.VMEM((bt,), jnp.float32),  # running denom
-        ],
-        interpret=interpret,
-    )(x, phi_n, ys)
-    return out[:m]
+    y, _ = combine_online_pallas(x[None], phi_n, ys[None],
+                                 _cfg_2d(bt, bs, interpret))
+    return y[0]

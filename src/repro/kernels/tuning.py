@@ -1,0 +1,136 @@
+"""Kernel-config subsystem: block sizes, accumulation dtype, interpret policy.
+
+Replaces the two hardcoded policies the seed kernels shipped with:
+
+  * ``bt = bs = 128`` baked into every ``pallas_call`` — now a
+    ``KernelConfig`` that callers derive from ``MoEConfig`` (or autotune).
+  * the import-time ``INTERPRET = jax.default_backend() != "tpu"`` global —
+    backend is now evaluated **lazily per call** (``resolve_interpret``), so
+    selecting a backend after import is never silently stale and tests can
+    force either mode per call.
+
+Block-size guidance (see kernels/README.md for the full table): the d axis
+stays whole inside every tile, so VMEM pressure scales linearly with
+``block_tokens + block_slots``.  128 is the MXU-aligned sweet spot for
+d ≤ 8192; drop to 64 beyond that, and shrink ``block_slots`` first (the phi
+tile is re-read per token block, so a smaller slot tile costs less refetch
+traffic than a smaller token tile).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def backend_is_tpu() -> bool:
+    """Evaluated at call time, never at import time."""
+    return jax.default_backend() == "tpu"
+
+
+@dataclass(frozen=True)
+class KernelConfig:
+    """Per-call policy for the Soft-MoE Pallas kernels.
+
+    ``interpret=None`` means "decide from the backend at call time" — the
+    lazily-evaluated replacement for the old module global.
+    """
+
+    block_tokens: int = 128
+    block_slots: int = 128
+    acc_dtype: str = "float32"  # accumulator / softmax-stat dtype
+    interpret: Optional[bool] = None
+
+    def resolve_interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return not backend_is_tpu()
+
+    def acc(self):
+        return jnp.dtype(self.acc_dtype)
+
+    def replace(self, **kw) -> "KernelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def default_config(m: int, d: int, s: int,
+                   base: Optional[KernelConfig] = None) -> KernelConfig:
+    """Heuristic block sizes for a (tokens, d_model, slots) problem.
+
+    Derived from the VMEM budget in kernels/README.md: tiles are
+    (block, d) so at large d the block must shrink to keep
+    x-tile + phi-tile + acc + dx/dphi accumulators under ~12 MB/core.
+    Tiny problem axes clamp down so the pad waste stays bounded.
+    """
+    cfg = base or KernelConfig()
+    bt, bs = cfg.block_tokens, cfg.block_slots
+    if d > 8192:
+        bt, bs = min(bt, 64), min(bs, 64)
+    elif d > 4096:
+        bs = min(bs, 64)
+    # Don't tile far past the actual extent (pad waste); keep lane alignment.
+    bt = max(8, min(bt, _round_up(m, 8)))
+    bs = max(8, min(bs, _round_up(s, 8)))
+    return cfg.replace(block_tokens=bt, block_slots=bs)
+
+
+def config_from_moe(moe_cfg, m: int, d: int,
+                    interpret: Optional[bool] = None) -> KernelConfig:
+    """Build a KernelConfig from MoEConfig fields (0 = auto-heuristic)."""
+    s = moe_cfg.total_slots()
+    base = KernelConfig(
+        acc_dtype=getattr(moe_cfg, "kernel_acc_dtype", "float32"),
+        interpret=interpret,
+    )
+    cfg = default_config(m, d, s, base)
+    bt = getattr(moe_cfg, "kernel_block_tokens", 0)
+    bs = getattr(moe_cfg, "kernel_block_slots", 0)
+    if bt:
+        cfg = cfg.replace(block_tokens=bt)
+    if bs:
+        cfg = cfg.replace(block_slots=bs)
+    return cfg
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+# -- autotune sweep hook -----------------------------------------------------
+
+DEFAULT_SWEEP: Sequence[tuple] = (
+    (64, 64), (64, 128), (128, 64), (128, 128), (128, 256), (256, 128),
+)
+
+
+def autotune(build_fn: Callable[[KernelConfig], Callable[[], jax.Array]],
+             base: Optional[KernelConfig] = None,
+             sweep: Sequence[tuple] = DEFAULT_SWEEP,
+             iters: int = 3) -> KernelConfig:
+    """Time ``build_fn(cfg)()`` for each (block_tokens, block_slots) in the
+    sweep and return the fastest config.  ``build_fn`` returns a nullary
+    thunk (typically a jitted closure over real operands) so compile time
+    is excluded via a warmup call.  Candidates that fail to trace/compile
+    (e.g. VMEM overflow at large d) are skipped rather than fatal.
+    """
+    import time
+
+    base = base or KernelConfig()
+    best, best_t = base, float("inf")
+    for bt, bs in sweep:
+        cfg = base.replace(block_tokens=bt, block_slots=bs)
+        try:
+            fn = build_fn(cfg)
+            jax.block_until_ready(fn())  # warmup/compile
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(fn())
+            dt = (time.perf_counter() - t0) / iters
+        except Exception:  # noqa: BLE001 — skip invalid tilings
+            continue
+        if dt < best_t:
+            best, best_t = cfg, dt
+    return best

@@ -49,15 +49,16 @@ def expert_init(rng, num_experts: int, d_model: int, d_ff: int,
 
 
 def experts_apply(params, xs, act: str = "silu"):
-    """xs: (num_experts, slots_or_capacity, d) -> same shape.
-    One einsum per projection; expert axis stays leading so it shards over
-    the `model` mesh axis (expert parallelism)."""
+    """xs: (num_experts | 1, slots_or_capacity, d) -> (num_experts, s, d).
+    Batched matmuls so a leading 1 broadcasts against the expert axis
+    (shared-expert path feeds every expert the same tokens without a
+    caller-side ``broadcast_to`` materialization); the expert axis stays
+    leading so it shards over the `model` mesh axis (expert parallelism)."""
     dt = xs.dtype
     f = activation(act)
-    up = jnp.einsum("esd,edf->esf", xs, params["w_up"].astype(dt))
+    up = xs @ params["w_up"].astype(dt)  # (1|E, s, d) @ (E, d, f)
     if "w_gate" in params:
-        h = f(jnp.einsum("esd,edf->esf", xs,
-                         params["w_gate"].astype(dt))) * up
+        h = f(xs @ params["w_gate"].astype(dt)) * up
     else:
         h = f(up)
-    return jnp.einsum("esf,efd->esd", h, params["w_down"].astype(dt))
+    return h @ params["w_down"].astype(dt)

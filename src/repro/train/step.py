@@ -71,7 +71,17 @@ def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig,
             body, (jnp.zeros(()), zero_grads), mbs
         )
         grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
-        metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        # Aggregate per-microbatch metrics over the scan axis: max-type
+        # inspection stats (e.g. the Soft-MoE `max_combine` softmax-collapse
+        # probe) take the step max, everything else the mean — keeping only
+        # the last microbatch (the old behavior) under-reports both.
+        # Keyed per LEAF path so nested metric pytrees aggregate correctly.
+        def agg(path, v):
+            leaf = path[-1] if path else None
+            name = str(getattr(leaf, "key", getattr(leaf, "name", "")))
+            return v.max(axis=0) if name.startswith("max_") else v.mean(axis=0)
+
+        metrics = jax.tree_util.tree_map_with_path(agg, metrics)
         return loss_sum / microbatches, metrics, grads
 
     def train_step(state, batch):
