@@ -1,0 +1,168 @@
+"""Continuous vs wave batching under a Poisson arrival trace.
+
+Replays one fixed trace of mixed-length requests (Poisson arrivals,
+uniform prompt lengths and token budgets) through both engines and
+reports throughput (generated tokens / makespan) and per-request latency
+(submit -> done) percentiles:
+
+  PYTHONPATH=src python benchmarks/bench_serve.py            # full trace
+  PYTHONPATH=src python benchmarks/bench_serve.py --smoke    # CI-sized
+
+The wave engine admits up to `batch` queued requests, decodes the whole
+wave in lockstep until its longest row finishes, and only then admits
+again — a finished row's slot idles, and a request arriving mid-wave
+waits for the boundary. The continuous engine retires rows and admits
+replacements every tick, so the same trace finishes in fewer model calls
+and each request's latency tracks its own length, not its wave's.
+
+Emits `name,us_per_call,derived` rows (benchmarks/common.py contract)
+plus a human-readable summary.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import emit  # noqa: E402
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.models import lm_init  # noqa: E402
+from repro.serve import (  # noqa: E402
+    Request,
+    SamplingParams,
+    ServeEngine,
+    WaveEngine,
+)
+
+
+def make_trace(n_requests: int, rate: float, seed: int = 0):
+    """(arrival_time, prompt, max_new, sampling) tuples; Poisson arrivals
+    at `rate` req/s, prompt len U[4,24], budget U[4,32], a mix of greedy
+    and temperature/top-k/top-p rows."""
+    rng = np.random.RandomState(seed)
+    t = 0.0
+    trace = []
+    for i in range(n_requests):
+        t += rng.exponential(1.0 / rate)
+        plen = int(rng.randint(4, 25))
+        prompt = [int(x) for x in rng.randint(1, 200, size=plen)]
+        max_new = int(rng.randint(4, 33))
+        if i % 3 == 0:
+            sp = SamplingParams()  # greedy
+        elif i % 3 == 1:
+            sp = SamplingParams(temperature=0.8, top_k=40, seed=i)
+        else:
+            sp = SamplingParams(temperature=1.0, top_p=0.9, seed=i)
+        trace.append((t, prompt, max_new, sp))
+    return trace
+
+
+def replay(engine, trace, tick):
+    """Drive `engine` against wall-clock arrivals; returns (makespan_s,
+    requests). `tick(engine)` advances the engine one step when work is
+    available."""
+    reqs = [
+        Request(prompt=p, max_new_tokens=m, sampling=sp)
+        for (_, p, m, sp) in trace
+    ]
+    t0 = time.perf_counter()
+    i = 0
+    while True:
+        now = time.perf_counter() - t0
+        while i < len(trace) and trace[i][0] <= now:
+            engine.submit(reqs[i])
+            i += 1
+        if all(r.done for r in reqs):
+            break
+        if not tick(engine):
+            if i < len(trace):  # idle: wait for the next arrival
+                time.sleep(min(0.001, trace[i][0] - now))
+    return time.perf_counter() - t0, reqs
+
+
+def continuous_tick(eng):
+    if eng.sched.pending():
+        eng.step()
+        return True
+    return False
+
+
+def wave_tick(eng):
+    if eng.queue:
+        eng.run()  # drains currently-queued waves; late arrivals wait
+        return True
+    return False
+
+
+def summarize(label, makespan, reqs, decode_steps):
+    total_tokens = sum(len(r.out) for r in reqs)
+    lat = np.array([r.t_done - r.t_submit for r in reqs])
+    tps = total_tokens / makespan
+    p50, p99 = np.percentile(lat, 50), np.percentile(lat, 99)
+    print(f"{label:12s} {total_tokens:5d} tok in {makespan:6.2f}s "
+          f"-> {tps:7.1f} tok/s | latency p50 {p50*1e3:7.1f}ms "
+          f"p99 {p99*1e3:7.1f}ms | {decode_steps} decode calls")
+    emit(f"serve_{label}_tok_s", 1e6 / max(tps, 1e-9), f"{tps:.1f} tok/s")
+    emit(f"serve_{label}_p50", p50 * 1e6, "per-request latency")
+    emit(f"serve_{label}_p99", p99 * 1e6, "per-request latency")
+    return tps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: 8 requests, skips nothing else")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = 8
+
+    cfg = reduced(get_config(args.arch))
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    trace = make_trace(args.requests, args.rate)
+    print(f"arch={args.arch} (reduced) requests={args.requests} "
+          f"batch={args.batch} rate={args.rate}/s")
+
+    # Warm both engines on a throwaway request so compile time (identical
+    # one-off cost for both) does not skew the trace replay.
+    for build in (
+        lambda: ServeEngine(cfg, params, batch_size=args.batch,
+                            max_len=args.max_len),
+        lambda: WaveEngine(cfg, params, batch_size=args.batch,
+                           max_len=args.max_len),
+    ):
+        eng = build()
+        eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=2))
+        eng.run()
+
+    wave = WaveEngine(cfg, params, batch_size=args.batch,
+                      max_len=args.max_len)
+    mk_w, reqs_w = replay(wave, trace, wave_tick)
+    tps_w = summarize("wave", mk_w, reqs_w, wave.decode_steps)
+
+    cont = ServeEngine(cfg, params, batch_size=args.batch,
+                       max_len=args.max_len)
+    mk_c, reqs_c = replay(cont, trace, continuous_tick)
+    tps_c = summarize("continuous", mk_c, reqs_c, cont.decode_steps)
+
+    assert cont._decode._cache_size() == 1, "decode recompiled mid-trace"
+    speedup = tps_c / max(tps_w, 1e-9)
+    print(f"continuous/wave throughput: {speedup:.2f}x")
+    emit("serve_speedup", speedup * 1e6, "continuous/wave tok/s ratio")
+    if not args.smoke and speedup <= 1.0:
+        raise SystemExit("continuous batching did not beat wave batching")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,13 @@
-"""Serve a small LM with batched requests through the engine.
+"""Serve a small LM through the continuous-batching engine.
 
   PYTHONPATH=src python examples/serve_lm.py --arch qwen2-0.5b --requests 6
 
 Uses the reduced config (random weights — this demonstrates the serving
-machinery: prefill -> batched lockstep decode over the KV-cache pool,
-wave admission, greedy/temperature sampling)."""
+machinery): requests with mixed prompt lengths, token budgets, and
+per-request sampling params stream through the slot pool; chunked prefill
+interleaves with decode; rows retire the step they finish and the next
+queued request takes the slot immediately. Tokens stream via the
+``Request.on_token`` callback as they are sampled."""
 import argparse
 import sys
 import time
@@ -15,7 +18,7 @@ import jax
 
 from repro.configs import get_config, reduced
 from repro.models import lm_init
-from repro.serve import Request, ServeEngine, sample_temperature
+from repro.serve import Request, SamplingParams, ServeEngine
 
 
 def main():
@@ -25,32 +28,46 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--stream", action="store_true",
+                    help="print each token as it is sampled")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
     print(f"serving {args.arch} (reduced: {cfg.num_layers}L "
           f"d={cfg.d_model}, vocab={cfg.vocab_size})")
     params = lm_init(jax.random.PRNGKey(0), cfg)
-    sampler = (
-        (lambda r, l: sample_temperature(r, l, args.temperature))
-        if args.temperature > 0 else None
-    )
-    kw = {"sampler": sampler} if sampler else {}
-    eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=128, **kw)
+    eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=128)
+
+    def stream(req, tok):
+        print(f"  req[{req.sampling.seed}] += {tok}")
 
     rng = jax.random.PRNGKey(1)
+    reqs = []
     for i in range(args.requests):
         rng, r = jax.random.split(rng)
         prompt = list(
-            jax.random.randint(r, (4 + i % 5,), 1, cfg.vocab_size)
-            .tolist()
+            jax.random.randint(r, (4 + i % 5,), 1, cfg.vocab_size).tolist()
         )
-        eng.submit(Request(prompt=prompt, max_new_tokens=args.max_new))
+        req = Request(
+            prompt=prompt,
+            max_new_tokens=args.max_new,
+            sampling=SamplingParams(
+                temperature=args.temperature, top_k=args.top_k,
+                top_p=args.top_p, seed=i,
+            ),
+            on_token=stream if args.stream else None,
+        )
+        reqs.append(req)
+        eng.submit(req)
 
     t0 = time.perf_counter()
     steps = eng.run()
     dt = time.perf_counter() - t0
-    total_tokens = args.requests * args.max_new
+    total_tokens = sum(len(r.out) for r in reqs)
+    for i, r in enumerate(reqs):
+        print(f"req {i}: prompt[{len(r.prompt)}] -> {r.out}")
     print(f"{args.requests} requests, {steps} decode steps, "
           f"{total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s on CPU)")

@@ -263,9 +263,10 @@ def build_cell(cfg, shape_name: str, mesh: Mesh,
             in_shardings=(params_sh, batch_shardings(mesh, toks), cache_sh),
             donate=(2,),
         )
-    # decode
+    # decode: per-row positions (continuous batching — rows at independent
+    # offsets; pos<0 rows are inactive no-ops)
     toks = _sds((b, 1), jnp.int32)
-    pos = _sds((), jnp.int32)
+    pos = _sds((b,), jnp.int32)
     fn = make_decode_step(cfg)
     return Cell(
         name=f"{cfg.name}:{shape_name}", fn=fn,

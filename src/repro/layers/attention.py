@@ -54,7 +54,12 @@ def gqa_init(rng, cfg):
 def init_kv_cache(cfg, batch: int, length: int, is_global: bool,
                   dtype=jnp.bfloat16):
     """Cache for one layer. Sliding-window layers use a ring buffer of the
-    window size; global layers allocate the full length."""
+    window size; global layers allocate the full length.
+
+    ``pos`` is PER ROW — (batch, length) — so each row advances through its
+    ring independently: continuous-batching serving admits/retires rows at
+    arbitrary decode steps (serve/cache_pool.py). An entry with pos < 0 is
+    invalid and masked out of attention."""
     a = cfg.attention
     if a.sliding_window is not None and not is_global:
         length = min(length, a.sliding_window)
@@ -62,12 +67,12 @@ def init_kv_cache(cfg, batch: int, length: int, is_global: bool,
         return {
             "ckv": jnp.zeros((batch, length, a.kv_lora_rank), dtype),
             "krope": jnp.zeros((batch, length, a.qk_rope_head_dim), dtype),
-            "pos": jnp.full((length,), -1, jnp.int32),
+            "pos": jnp.full((batch, length), -1, jnp.int32),
         }
     return {
         "k": jnp.zeros((batch, length, a.num_kv_heads, a.head_dim), dtype),
         "v": jnp.zeros((batch, length, a.num_kv_heads, a.head_dim), dtype),
-        "pos": jnp.full((length,), -1, jnp.int32),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
     }
 
 
@@ -100,24 +105,26 @@ def _attend_chunked(q, k, v, qpos, kpos, causal: bool,
     sk, g, dv = k.shape[1], k.shape[2], v.shape[-1]
     rep = h // g
     scale = scale if scale is not None else 1.0 / float(d) ** 0.5
+    if kpos.ndim == 1:  # shared key positions -> per-row
+        kpos = jnp.broadcast_to(kpos[None], (b, sk))
     if sk % block != 0:
         pad = (sk + block - 1) // block * block - sk
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        kpos = jnp.pad(kpos, ((0, pad),), constant_values=-1)
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad)), constant_values=-1)
         sk += pad
     nb = sk // block
     qg = q.astype(jnp.float32).reshape(b, sq, g, rep, d)
     kb = k.astype(jnp.float32).reshape(b, nb, block, g, d).transpose(1, 0, 2, 3, 4)
     vb = v.astype(jnp.float32).reshape(b, nb, block, g, dv).transpose(1, 0, 2, 3, 4)
-    kpb = kpos.reshape(nb, block)
+    kpb = kpos.reshape(b, nb, block).transpose(1, 0, 2)
 
     def body(carry, inp):
         m, l, acc = carry
         kblk, vblk, kp = inp
         s = jnp.einsum("bsgrd,btgd->bgrst", qg, kblk) * scale
-        mask = make_mask(qpos, kp, causal, window, is_global)  # (sq, block)
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        mask = make_mask(qpos, kp, causal, window, is_global)  # (b,sq,block)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -160,19 +167,42 @@ def make_mask(q_positions, k_positions, causal: bool,
 
 
 def _ring_update(cache, new_vals: dict, positions):
-    """Write `new_vals[name]` (B,S,...) at ring slots positions % length."""
-    length = cache["pos"].shape[0]
-    slots = positions % length  # (S,)
+    """Write `new_vals[name]` (B,S,...) at per-row ring slots pos % length.
+
+    positions: (S,) shared or (B,S) per row. Tokens with position < 0 are
+    NO-OPS — the old cache entry survives. The serving engine relies on
+    this twice: (a) inactive/prefilling rows ride through batched decode
+    steps with position -1 without corrupting their cache, (b) left-pad
+    tokens of a chunked-prefill chunk write nothing."""
+    b, length = cache["pos"].shape
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None], (b, positions.shape[0]))
+    # Invalid tokens scatter to the out-of-bounds slot `length`, which
+    # mode="drop" discards — a predicated write with no gather/select.
+    slots = jnp.where(positions >= 0, positions % length, length)  # (B,S)
+    bidx = jnp.arange(b)[:, None]
     out = dict(cache)
     for name, val in new_vals.items():
-        out[name] = cache[name].at[:, slots].set(val.astype(cache[name].dtype))
-    out["pos"] = cache["pos"].at[slots].set(positions)
+        out[name] = cache[name].at[bidx, slots].set(
+            val.astype(cache[name].dtype), mode="drop"
+        )
+    out["pos"] = cache["pos"].at[bidx, slots].set(positions, mode="drop")
     return out
+
+
+def reset_kv_rows(cache, row):
+    """Invalidate row(s) of one layer's KV cache: pos -> -1. The stale K/V
+    values stay in memory — they are unreachable because make_mask admits
+    only entries with pos >= 0, and any later write overwrites both the
+    value and its pos. `row` may be a traced scalar (jitted slot clear)."""
+    return dict(cache, pos=cache["pos"].at[row].set(-1))
 
 
 def gqa_apply(params, cfg, x, *, layer_is_global: bool = True,
               positions=None, cache=None, mode: str = "train"):
-    """Returns (out, new_cache). positions: (S,) absolute token positions."""
+    """Returns (out, new_cache). positions: (S,) shared or (B,S) per-row
+    absolute token positions; entries < 0 are pad/inactive (no cache write,
+    masked from attention)."""
     a = cfg.attention
     b, s, _ = x.shape
     if positions is None:
@@ -195,12 +225,15 @@ def gqa_apply(params, cfg, x, *, layer_is_global: bool = True,
         k_all, v_all, kpos = k, v, positions
     else:
         cache = _ring_update(cache, {"k": k, "v": v}, positions)
-        if s > 1:
-            # Prefill: attend the input KV directly — the ring buffer may
-            # already have wrapped (window < prefill length), so the cache
-            # is only valid for *subsequent* decode steps.
+        if s > 1 and mode == "prefill":
+            # Whole-prompt prefill: attend the input KV directly — the ring
+            # buffer may already have wrapped (window < prefill length), so
+            # the cache is only valid for *subsequent* decode steps.
             k_all, v_all, kpos = k, v, positions
         else:
+            # Decode (s==1) and chunked-prefill continuation (s>1 with
+            # mode="decode"): attend over the cache, which now holds both
+            # prior chunks and the tokens just written.
             k_all, v_all, kpos = cache["k"], cache["v"], cache["pos"]
 
     # Flash-style path for long KV: never materializes (Sq, Sk) logits.
@@ -209,7 +242,9 @@ def gqa_apply(params, cfg, x, *, layer_is_global: bool = True,
                               cfg.causal, window, is_global=layer_is_global)
     else:
         mask = make_mask(positions, kpos, cfg.causal, window,
-                         layer_is_global)[None]
+                         layer_is_global)
+        if mask.ndim == 2:  # shared (S,) positions -> add batch dim
+            mask = mask[None]
         out = _attend(q, k_all, v_all, mask)
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return out, cache
@@ -272,9 +307,10 @@ def mla_apply(params, cfg, x, *, positions=None, cache=None,
 
     if cache is not None:
         cache = _ring_update(cache, {"ckv": ckv, "krope": krope}, positions)
-        if s > 1:  # prefill: attend input latents (see gqa_apply note)
+        if s > 1 and mode == "prefill":
+            # whole-prompt prefill: attend input latents (see gqa_apply)
             ckv_all, krope_all, kpos = ckv, krope, positions
-        else:
+        else:  # decode / chunked-prefill continuation: attend the cache
             ckv_all, krope_all = cache["ckv"], cache["krope"]
             kpos = cache["pos"]
     else:
@@ -296,7 +332,9 @@ def mla_apply(params, cfg, x, *, positions=None, cache=None,
         lat = _attend_chunked(q_cat, k_cat, v_lat, positions, kpos,
                               cfg.causal, None, scale=scale)
     else:
-        mask = make_mask(positions, kpos, cfg.causal, None)[None]
+        mask = make_mask(positions, kpos, cfg.causal, None)
+        if mask.ndim == 2:
+            mask = mask[None]
         lat = _attend(q_cat, k_cat, v_lat, mask, scale=scale)
 
     # Expand the weighted latent through W_uv once.

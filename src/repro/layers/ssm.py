@@ -143,9 +143,16 @@ def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
     return y, final
 
 
-def ssm_apply(params, cfg, x, *, cache=None, mode: str = "train"):
+def ssm_apply(params, cfg, x, *, cache=None, mode: str = "train",
+              positions=None):
     """Full Mamba-2 block. cache: {"conv": (B,W-1,C), "state": (B,h,dh,n)}
-    or None. Returns (out, new_cache)."""
+    or None. Returns (out, new_cache).
+
+    ``positions`` ((S,) or (B,S)) is only consulted on cached paths: tokens
+    with position < 0 (chunked-prefill left-pad, inactive serving rows) are
+    exact no-ops on the recurrent state — their dt is forced to 0 (decay
+    exp(0)=1, contribution dt·B·x=0) and their conv-tap input zeroed; rows
+    with no valid token keep their conv ring unshifted."""
     s_cfg = cfg.ssm
     d = cfg.d_model
     di = s_cfg.d_inner(d)
@@ -161,6 +168,13 @@ def ssm_apply(params, cfg, x, *, cache=None, mode: str = "train"):
     )
     dt_raw = x @ params["w_dt"].astype(dt_)
 
+    valid = None
+    if cache is not None and positions is not None:
+        valid = positions >= 0  # (S,) or (B,S)
+        if valid.ndim == 1:
+            valid = jnp.broadcast_to(valid[None], x.shape[:2])
+        xbc = xbc * valid[..., None].astype(xbc.dtype)
+
     conv_state = cache["conv"] if cache is not None else None
     xbc, new_conv = _causal_conv(
         xbc, params["conv_w"], params["conv_b"], conv_state
@@ -173,6 +187,8 @@ def ssm_apply(params, cfg, x, *, cache=None, mode: str = "train"):
     dt = jax.nn.softplus(
         dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
     )
+    if valid is not None:
+        dt = dt * valid[..., None]  # dt=0 => state update is a no-op
     A = -jnp.exp(params["A_log"].astype(jnp.float32))
 
     init_state = cache["state"] if cache is not None else None
@@ -198,6 +214,15 @@ def ssm_apply(params, cfg, x, *, cache=None, mode: str = "train"):
 
     new_cache = None
     if cache is not None:
+        if valid is not None:
+            # A row with zero valid tokens must not shift its conv ring
+            # (dt=0 already freezes `state`; the conv shift has no such
+            # algebraic no-op, so predicate per row).
+            row_live = valid.any(axis=1)  # (B,)
+            new_conv = jnp.where(
+                row_live[:, None, None], new_conv.astype(cache["conv"].dtype),
+                cache["conv"],
+            )
         new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
                      "state": new_state.astype(cache["state"].dtype)}
     return out, new_cache
@@ -220,6 +245,13 @@ def ssd_decode_step(x, dt, A, B, C, state):
     )
     y = jnp.einsum("bhdn,bhn->bhd", new_state, C0)[:, None]  # (b,1,h,dh)
     return y, new_state
+
+
+def reset_ssm_rows(cache, row):
+    """Zero row(s) of an SSM cache — unlike KV entries there is no position
+    mask guarding stale state, so slot reuse must scrub it explicitly."""
+    return {"conv": cache["conv"].at[row].set(0),
+            "state": cache["state"].at[row].set(0)}
 
 
 def init_ssm_cache(cfg, batch: int, dtype=jnp.bfloat16):

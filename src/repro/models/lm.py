@@ -89,6 +89,7 @@ def block_apply(params, cfg, x, *, is_moe: bool, is_global=True,
         s_out, s_cache = ssm_apply(
             params["ssm"], cfg, xn,
             cache=None if cache is None else cache.get("ssm"), mode=mode,
+            positions=positions,
         )
         if cfg.hybrid_parallel and cfg.has_attention():
             mix = (mix + s_out) * 0.5  # Hymba: mean-fuse parallel heads
@@ -204,9 +205,11 @@ def _unrolled_segment(seg_params, cfg, x, start, count, is_moe, caches,
 def lm_apply(params, cfg, tokens, *, embeds=None, positions=None,
              cache=None, mode: str = "train", use_kernel: bool = False,
              last_only: bool = False):
-    """tokens: (B, S) int32; embeds: (B, N, E) frontend stub (vlm).
-    Returns (logits, new_cache, aux). ``last_only`` unembeds only the
-    final position — prefill needs one next-token distribution, not
+    """tokens: (B, S) int32; embeds: (B, N, E) frontend stub (vlm);
+    positions: (S,) shared or (B, S) per-row (continuous-batching decode —
+    entries < 0 mark pad/inactive tokens that neither write nor read any
+    cache). Returns (logits, new_cache, aux). ``last_only`` unembeds only
+    the final position — prefill needs one next-token distribution, not
     S×vocab logits (at qwen2-72b:prefill_32k the full-logit tensor is
     32×32768×152064 f32 ≈ 638GB global)."""
     dtype = jnp.dtype(cfg.dtype)
@@ -250,7 +253,12 @@ def lm_apply(params, cfg, tokens, *, embeds=None, positions=None,
 
 
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
-    """Per-layer cache list (python list pytree — heterogeneous lengths)."""
+    """Per-layer cache list (python list pytree — heterogeneous lengths).
+
+    Every leaf has a leading `batch` dim, and attention caches carry a
+    per-row (batch, length) `pos` array — rows advance independently, so
+    the serving layer (serve/cache_pool.py) can admit/retire individual
+    rows at any decode step (continuous batching)."""
     caches = []
     for i in range(cfg.num_layers):
         c = {}

@@ -1,8 +1,25 @@
+"""Serving subsystem: continuous batching over a per-row KV/SSM cache pool.
+
+Layering (docs/serving.md has the full design):
+  cache_pool — slot allocator over one fixed-shape device cache
+  sampling   — batched per-request sampler suite (greedy/temp/top-k/top-p)
+  scheduler  — host-side admission queue + slot state machine
+  engine     — ServeEngine (continuous) / WaveEngine (lockstep baseline)
+"""
+from .cache_pool import CachePool, clear_slot, pool_row, pool_write_row  # noqa: F401
 from .engine import (  # noqa: F401
-    Request,
     ServeEngine,
+    WaveEngine,
     make_decode_step,
+    make_prefill_chunk_step,
     make_prefill_step,
+)
+from .sampling import (  # noqa: F401
+    GREEDY,
+    SamplingParams,
     sample_greedy,
     sample_temperature,
+    sample_tokens,
+    stack_params,
 )
+from .scheduler import Request, Scheduler, SlotEntry  # noqa: F401

@@ -1,0 +1,109 @@
+"""Slot-based KV/SSM cache pool for continuous batching.
+
+The pool owns ONE device cache pytree of fixed shape (``num_slots`` rows ×
+``max_len`` positions, per layer — see ``models.init_cache``) for the whole
+engine lifetime; requests borrow a row ("slot") for their residency and
+return it the step they finish. Because attention caches store *per-row*
+positions, rows are fully independent: admitting or retiring one never
+touches another and never changes any jitted shape.
+
+Invariants (tested in tests/test_cache_pool.py):
+
+* A freshly acquired slot is CLEAN: every attention `pos` entry of the row
+  is -1 (stale K/V values may remain — they are unreachable, since the
+  causal mask admits only entries with pos >= 0 and any new write replaces
+  value and pos together) and SSM conv/state rows are zeroed (recurrent
+  state has no position mask, so it must be scrubbed).
+* Slot clears are a single jitted fixed-shape program (`slot` is a traced
+  scalar), so pool churn causes zero recompiles.
+* The pool never reallocates: `cache` leaves are replaced functionally by
+  the jitted step functions, but shapes/dtypes are immutable.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..layers.attention import reset_kv_rows
+from ..layers.ssm import reset_ssm_rows
+from ..models import init_cache
+
+
+def clear_slot(cache, slot):
+    """Pure function: invalidate row `slot` of every per-layer cache.
+    Attention rows get pos=-1; SSM rows are zeroed. Jit-safe (slot may be
+    traced)."""
+    out = []
+    for layer in cache:
+        c = dict(layer)
+        if "attn" in c:
+            c["attn"] = reset_kv_rows(c["attn"], slot)
+        if "ssm" in c:
+            c["ssm"] = reset_ssm_rows(c["ssm"], slot)
+        out.append(c)
+    return out
+
+
+def pool_row(cache, slot):
+    """Slice one row (kept as batch dim 1) out of every leaf — the batch-1
+    view chunked prefill runs the model over. Jit-safe."""
+    return jax.tree_util.tree_map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0), cache
+    )
+
+
+def pool_write_row(cache, slot, row):
+    """Scatter a batch-1 row pytree back into the pool at `slot`. Jit-safe."""
+    return jax.tree_util.tree_map(
+        lambda a, r: jax.lax.dynamic_update_slice_in_dim(
+            a, r.astype(a.dtype), slot, axis=0
+        ),
+        cache, row,
+    )
+
+
+class CachePool:
+    """Free-list slot allocator over one fixed-shape device cache.
+
+    Slot lifecycle: free -> acquire() [row cleared on device] -> in use by
+    exactly one request -> release() -> free. Allocation is LIFO so a hot
+    slot (cache rows still resident) is reused first.
+    """
+
+    def __init__(self, cfg, num_slots: int, max_len: int,
+                 dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, num_slots, max_len, dtype)
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        # Donated: the clear aliases the pool in place (accelerators).
+        self._clear = jax.jit(clear_slot, donate_argnums=(0,))
+        # Smallest per-layer ring length: chunked prefill must not write a
+        # chunk longer than this (a wrap inside one scatter would make
+        # duplicate-index write order undefined).
+        self.min_ring_len = min(
+            (layer["attn"]["pos"].shape[-1] for layer in self.cache
+             if "attn" in layer),
+            default=max_len,
+        )
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def acquire(self) -> Optional[int]:
+        """Pop a free slot and clear its row on device; None if exhausted."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self.cache = self._clear(self.cache, jnp.int32(slot))
+        return slot
+
+    def release(self, slot: int):
+        """Return a slot to the free list (host-side only — the row is
+        cleared lazily at the next acquire)."""
+        assert slot not in self._free, f"double release of slot {slot}"
+        self._free.append(slot)

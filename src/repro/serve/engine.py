@@ -1,33 +1,56 @@
-"""Batched serving engine: prefill + single-token decode over a fixed-shape
-KV cache pool.
+"""Serving engines over the per-row KV/SSM cache pool.
 
-``make_prefill_step`` / ``make_decode_step`` are the functions the dry-run
-lowers for the prefill/decode input shapes: decode processes ONE new token
-per sequence against a cache of `max_len` (the brief's decode_32k /
-long_500k semantics).
+``ServeEngine`` is the continuous-batching engine: requests are admitted
+the moment a cache-pool slot frees, prompts prefill in fixed-size chunks
+interleaved with decode steps, every decode tick advances ALL live rows in
+one batched model call, and a row retires (slot released, next request
+admitted) the tick it samples EOS or exhausts its budget. Sampling is the
+batched per-request suite from sampling.py.
 
-The engine batches requests *generation-synchronously*: a wave of requests
-is admitted together (prompts right-padded to a common length), decoded in
-lockstep, and the next wave admits when the wave finishes. Rows that hit
-EOS early are masked out but their cache row is only reused at the wave
-boundary — positions are shared across the batch, which keeps the cache's
-ring-buffer position index global and the decode step free of per-row
-gather/scatter. Full continuous batching would move `pos` into the cache
-as a per-row array; noted as an extension in DESIGN.md.
+Three jitted device programs run the whole serving loop, each with ONE
+fixed shape — request churn never triggers a recompile (asserted via
+``jax.jit`` cache stats in tests/test_serve.py):
+
+* prefill-chunk: (params, pool, logits_buf, slot, tokens(1,C), pos(1,C))
+  — slices the slot's batch-1 cache row out of the pool, runs the model in
+  chunked-prefill mode (attends prior chunks through the cache), scatters
+  the row back, and on every chunk writes the last-position logits into
+  row `slot` of the persistent (num_slots, vocab) logits buffer (only the
+  final chunk's write is ever consumed).
+* decode: (params, pool, tokens(B,1), positions(B,)) — one token for every
+  slot; inactive rows carry position -1, which the model turns into a
+  no-op (no cache write, no state update, masked from attention).
+* sample: sampling.sample_tokens over the logits buffer with per-slot
+  parameter arrays.
+
+``WaveEngine`` keeps the old wave-synchronous behaviour (admit a full
+batch, decode in lockstep, free slots only at the wave boundary) as the
+benchmark baseline for benchmarks/bench_serve.py.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+import time
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..models import init_cache, lm_apply
+from .cache_pool import CachePool, pool_row, pool_write_row
+from .sampling import GREEDY, SamplingParams, sample_tokens
+from .scheduler import Request, Scheduler
+
+
+# ---------------------------------------------------------------------------
+# jitted step factories (also lowered standalone by launch/specs.py)
+# ---------------------------------------------------------------------------
 
 
 def make_prefill_step(cfg, max_len: int):
-    """(params, tokens(B,S), cache) -> (logits(B,1,V), cache)."""
+    """Whole-prompt prefill: (params, tokens(B,S), cache) ->
+    (logits(B,1,V), cache). Shared positions arange(S) — the wave path and
+    the dry-run's prefill cells."""
 
     def prefill(params, tokens, cache):
         s = tokens.shape[1]
@@ -41,11 +64,12 @@ def make_prefill_step(cfg, max_len: int):
 
 
 def make_decode_step(cfg):
-    """(params, tokens(B,1), pos(), cache) -> (logits(B,1,V), cache)."""
+    """(params, tokens(B,1), pos(B,), cache) -> (logits(B,1,V), cache).
+    Per-row positions; rows with pos<0 are inactive no-ops."""
 
     def decode(params, tokens, pos, cache):
         logits, cache, _ = lm_apply(
-            params, cfg, tokens, positions=pos[None], cache=cache,
+            params, cfg, tokens, positions=pos[:, None], cache=cache,
             mode="decode",
         )
         return logits, cache
@@ -53,87 +77,277 @@ def make_decode_step(cfg):
     return decode
 
 
-def sample_greedy(rng, logits):
-    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+def make_prefill_chunk_step(cfg):
+    """Chunked prefill into one pool slot: (params, pool_cache, logits_buf,
+    slot, tokens(1,C), positions(1,C)) -> (pool_cache, logits_buf).
+
+    mode="decode" with S>1 makes attention read prior chunks back out of
+    the cache (and the SSM paths continue from their recurrent state), so
+    chunks compose exactly; left-pad tokens carry position -1 and touch
+    nothing."""
+
+    def prefill_chunk(params, cache, buf, slot, tokens, positions):
+        row = pool_row(cache, slot)
+        logits, row, _ = lm_apply(
+            params, cfg, tokens, positions=positions, cache=row,
+            mode="decode", last_only=True,
+        )
+        cache = pool_write_row(cache, slot, row)
+        buf = jax.lax.dynamic_update_slice_in_dim(
+            buf, logits[:, -1].astype(buf.dtype), slot, axis=0
+        )
+        return cache, buf
+
+    return prefill_chunk
 
 
-def sample_temperature(rng, logits, temperature: float = 1.0):
-    return jax.random.categorical(
-        rng, logits[:, -1].astype(jnp.float32) / max(temperature, 1e-6)
-    ).astype(jnp.int32)
-
-
-@dataclass
-class Request:
-    prompt: List[int]
-    max_new_tokens: int = 16
-    out: List[int] = field(default_factory=list)
-    done: bool = False
+# ---------------------------------------------------------------------------
+# Continuous-batching engine
+# ---------------------------------------------------------------------------
 
 
 class ServeEngine:
+    """Continuous-batching serving engine.
+
+    batch_size is the number of cache-pool slots (= max concurrent
+    requests); max_len caps prompt+generation per request. Per-request
+    sampling comes from Request.sampling; ``default_sampling`` fills in
+    for requests that keep the dataclass default.
+    """
+
     def __init__(self, cfg, params, batch_size: int, max_len: int,
                  eos_id: Optional[int] = None, pad_id: int = 0,
-                 sampler: Callable = sample_greedy, seed: int = 0):
+                 default_sampling: SamplingParams = GREEDY, seed: int = 0,
+                 prefill_chunk: Optional[int] = None,
+                 cache_dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch_size
+        self.max_len = max_len
+        self.pad_id = pad_id
+        self.default_sampling = default_sampling
+        self.seed = seed
+        self.pool = CachePool(cfg, batch_size, max_len, cache_dtype)
+        chunk = prefill_chunk or min(32, self.pool.min_ring_len)
+        assert chunk <= self.pool.min_ring_len, (
+            f"prefill_chunk {chunk} would wrap the smallest ring buffer "
+            f"({self.pool.min_ring_len}) inside one scatter"
+        )
+        self.sched = Scheduler(chunk, max_len, eos_id)
+        # Donate the cache (and logits buffer) so XLA aliases them in
+        # place instead of materializing a second full pool every tick
+        # (no-op on CPU, which lacks donation — a one-time warning).
+        self._prefill_chunk = jax.jit(
+            make_prefill_chunk_step(cfg), donate_argnums=(1, 2)
+        )
+        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(3,))
+        self._sample = jax.jit(sample_tokens)
+        # Per-slot logits of the *last* model call that touched the row —
+        # valid iff the row is in DECODE state.
+        self._logits = jnp.zeros((batch_size, cfg.vocab_size), jnp.float32)
+        # Per-slot sampling parameter arrays (host; fixed shapes).
+        self._temp = np.zeros((batch_size,), np.float32)
+        self._top_k = np.zeros((batch_size,), np.int32)
+        self._top_p = np.ones((batch_size,), np.float32)
+        self._seed = np.zeros((batch_size,), np.int32)
+        self._step = np.zeros((batch_size,), np.int32)
+        self.decode_steps = 0  # batched decode model calls (perf counter)
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, req: Request):
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt({len(req.prompt)}) + max_new({req.max_new_tokens}) "
+                f"exceeds max_len {self.max_len}"
+            )
+        self.sched.submit(req)
+
+    # -- tick phases -------------------------------------------------------
+
+    def _admit(self):
+        while self.sched.has_queued() and self.pool.num_free:
+            slot = self.pool.acquire()
+            entry = self.sched.bind(slot)
+            sp = entry.req.sampling
+            if sp is GREEDY:
+                sp = self.default_sampling
+                entry.req.sampling = sp
+            self._temp[slot] = sp.temperature
+            self._top_k[slot] = sp.top_k
+            self._top_p[slot] = sp.top_p
+            self._seed[slot] = sp.seed
+            self._step[slot] = 0
+
+    def _do_prefill_chunk(self) -> bool:
+        entry = self.sched.next_prefill()
+        if entry is None:
+            return False
+        toks, poss = entry.take_chunk()
+        self.pool.cache, self._logits = self._prefill_chunk(
+            self.params, self.pool.cache, self._logits,
+            jnp.int32(entry.slot),
+            jnp.asarray([toks], jnp.int32), jnp.asarray([poss], jnp.int32),
+        )
+        return True
+
+    def _do_decode(self) -> int:
+        """Sample every DECODE row from the logits buffer, retire finished
+        rows, then one batched decode step for the survivors. Returns the
+        number of tokens emitted."""
+        entries = self.sched.decode_entries()
+        if not entries:
+            return 0
+        toks = np.asarray(self._sample(
+            self._logits, self._temp, self._top_k, self._top_p,
+            self._seed, self._step,
+        ))
+        in_toks = np.full((self.batch, 1), self.pad_id, np.int32)
+        in_pos = np.full((self.batch,), -1, np.int32)
+        emitted = 0
+        survivors = []
+        for e in entries:
+            tok = int(toks[e.slot])
+            self._step[e.slot] += 1
+            emitted += 1
+            if self.sched.record_token(e, tok):
+                self.pool.release(e.slot)
+            else:
+                in_toks[e.slot, 0] = tok
+                in_pos[e.slot] = e.pos
+                survivors.append(e)
+        if survivors:
+            logits, self.pool.cache = self._decode(
+                self.params, jnp.asarray(in_toks), jnp.asarray(in_pos),
+                self.pool.cache,
+            )
+            self._logits = logits[:, 0].astype(jnp.float32)
+            self.decode_steps += 1
+            for e in survivors:
+                e.pos += 1
+        return emitted
+
+    def step(self) -> int:
+        """One engine tick: admit, (maybe) one prefill chunk, one batched
+        sample+decode pass. Returns tokens emitted this tick."""
+        self._admit()
+        self._do_prefill_chunk()
+        return self._do_decode()
+
+    def run(self) -> int:
+        """Drain queue + live rows to completion; returns total decode
+        model calls (the old wave-engine return contract)."""
+        while self.sched.pending():
+            self.step()
+        return self.decode_steps
+
+
+# ---------------------------------------------------------------------------
+# Wave-synchronous baseline (benchmarks)
+# ---------------------------------------------------------------------------
+
+
+class WaveEngine:
+    """The pre-continuous engine: a wave of requests admits together,
+    decodes in lockstep, and every slot is held until the LAST row of the
+    wave finishes. Kept as the baseline bench_serve.py measures against."""
+
+    def __init__(self, cfg, params, batch_size: int, max_len: int,
+                 eos_id: Optional[int] = None, pad_id: int = 0,
+                 default_sampling: SamplingParams = GREEDY, seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
         self.max_len = max_len
         self.eos_id = eos_id
         self.pad_id = pad_id
-        self.sampler = sampler
-        self.rng = jax.random.PRNGKey(seed)
-        self._prefill = jax.jit(make_prefill_step(cfg, max_len))
-        self._decode = jax.jit(make_decode_step(cfg))
+        self.default_sampling = default_sampling
+
+        def prefill(params, t, p, cache):
+            logits, cache, _ = lm_apply(
+                params, cfg, t, positions=p, cache=cache,
+                mode="prefill", last_only=True,
+            )
+            return logits, cache
+
+        # Jitted once; still recompiles per distinct padded prompt length —
+        # an inherent wave cost the continuous engine's fixed chunks remove.
+        self._prefill = jax.jit(prefill, donate_argnums=(3,))
+        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(3,))
+        self._sample = jax.jit(sample_tokens)
         self.queue: List[Request] = []
+        self.decode_steps = 0
 
     def submit(self, req: Request):
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
 
-    def _next_wave(self) -> List[Request]:
-        wave = self.queue[: self.batch]
-        self.queue = self.queue[self.batch:]
-        return wave
+    def _sample_wave(self, wave, logits, step_base):
+        sp = [
+            (r.sampling if r.sampling is not GREEDY else
+             self.default_sampling)
+            for r in wave
+        ] + [GREEDY] * (self.batch - len(wave))
+        toks = self._sample(
+            logits[:, -1].astype(jnp.float32),
+            np.array([p.temperature for p in sp], np.float32),
+            np.array([p.top_k for p in sp], np.int32),
+            np.array([p.top_p for p in sp], np.float32),
+            np.array([p.seed for p in sp], np.int32),
+            np.full((self.batch,), step_base, np.int32),
+        )
+        return np.asarray(toks)
 
     def _run_wave(self, wave: List[Request]) -> int:
         plen = max(len(r.prompt) for r in wave)
-        toks = jnp.full((self.batch, plen), self.pad_id, jnp.int32)
+        toks = np.full((self.batch, plen), self.pad_id, np.int32)
+        poss = np.full((self.batch, plen), -1, np.int32)
         for i, r in enumerate(wave):
-            # right-align so the last prompt token sits at position plen-1
-            toks = toks.at[i, plen - len(r.prompt):].set(
-                jnp.asarray(r.prompt, jnp.int32)
-            )
+            # right-align so the last prompt token sits at index plen-1
+            toks[i, plen - len(r.prompt):] = r.prompt
+            poss[i, plen - len(r.prompt):] = np.arange(len(r.prompt))
         cache = init_cache(self.cfg, self.batch, self.max_len)
-        logits, cache = self._prefill(self.params, toks, cache)
-        self.rng, r_s = jax.random.split(self.rng)
-        nxt = self.sampler(r_s, logits)
+        logits, cache = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(poss), cache
+        )
+        nxt = self._sample_wave(wave, logits, 0)
+        now = time.perf_counter()
         for i, r in enumerate(wave):
             r.out.append(int(nxt[i]))
+            r.t_first_token = now
         steps = 0
         budget = max(r.max_new_tokens for r in wave)
-        pos = plen
+        pos = np.array([len(r.prompt) for r in wave]
+                       + [0] * (self.batch - len(wave)), np.int32)
         cur = nxt[:, None]
-        while steps < budget - 1 and pos < self.max_len:
+        while steps < budget - 1 and int(pos.max()) < self.max_len:
             logits, cache = self._decode(
-                self.params, cur, jnp.asarray(pos, jnp.int32), cache
+                self.params, jnp.asarray(cur), jnp.asarray(pos), cache
             )
-            self.rng, r_s = jax.random.split(self.rng)
-            nxt = self.sampler(r_s, logits)
+            self.decode_steps += 1
+            nxt = self._sample_wave(wave, logits, steps + 1)
+            now = time.perf_counter()
             for i, r in enumerate(wave):
                 if not r.done and len(r.out) < r.max_new_tokens:
                     tok = int(nxt[i])
                     r.out.append(tok)
                     if self.eos_id is not None and tok == self.eos_id:
                         r.done = True
+                        r.t_done = now
             cur = nxt[:, None]
             pos += 1
             steps += 1
+        now = time.perf_counter()
         for r in wave:
-            r.done = True
+            if not r.done:
+                r.done = True
+                r.t_done = now
         return steps + 1
 
     def run(self) -> int:
         total = 0
         while self.queue:
-            total += self._run_wave(self._next_wave())
+            wave = self.queue[: self.batch]
+            self.queue = self.queue[self.batch:]
+            total += self._run_wave(wave)
         return total

@@ -1,0 +1,113 @@
+"""Batched sampler suite with PER-REQUEST parameters.
+
+One fixed-shape jitted function (`sample_tokens`) samples every pool slot
+in parallel; greedy / temperature / top-k / top-p are all expressed as
+vectorized masking over the (num_slots, vocab) logits, so a mixed batch
+(row 0 greedy, row 1 top-p(0.9), row 2 top-k(5) at temperature 2.0) is one
+program — no per-request python dispatch, no recompiles as requests churn.
+
+Randomness is *per request*: row i draws from
+``fold_in(PRNGKey(seed_i), step_i)`` where step_i counts that request's
+generated tokens. A request therefore reproduces its exact token stream
+regardless of which slot it lands in or which other requests share the
+batch (tested in tests/test_sampling.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling controls.
+
+    temperature <= 0 means greedy (argmax); top_k <= 0 disables the top-k
+    filter; top_p >= 1 disables the nucleus filter. Filters compose
+    sequentially (HF-style): logits are temperature-scaled, top-k-masked,
+    and the nucleus is computed on the renormalized top-k survivors.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+
+GREEDY = SamplingParams()
+
+
+def stack_params(params_list) -> dict:
+    """Struct-of-arrays view of a list of SamplingParams (host numpy; fed
+    straight into `sample_tokens`)."""
+    return {
+        "temperature": np.array([p.temperature for p in params_list],
+                                np.float32),
+        "top_k": np.array([p.top_k for p in params_list], np.int32),
+        "top_p": np.array([p.top_p for p in params_list], np.float32),
+        "seed": np.array([p.seed for p in params_list], np.int32),
+    }
+
+
+def _topk_mask(scaled, top_k):
+    """Keep the top_k largest logits per row; top_k<=0 keeps everything."""
+    v = scaled.shape[-1]
+    sorted_desc = -jnp.sort(-scaled, axis=-1)
+    k_eff = jnp.where(top_k > 0, jnp.clip(top_k, 1, v), v)
+    thr = jnp.take_along_axis(sorted_desc, k_eff[:, None] - 1, axis=-1)
+    return scaled >= thr  # (B, V)
+
+
+def _topp_mask(scaled, top_p):
+    """Nucleus filter: smallest prefix of descending-prob tokens whose mass
+    reaches top_p. `scaled` may already carry -inf from an upstream filter
+    (softmax renormalizes over the survivors — sequential composition).
+    The top-1 token is always kept; top_p>=1 keeps all."""
+    probs = jax.nn.softmax(scaled, axis=-1)
+    order = jnp.argsort(-probs, axis=-1)
+    sp = jnp.take_along_axis(probs, order, axis=-1)
+    cum_before = jnp.cumsum(sp, axis=-1) - sp  # exclusive cumsum
+    keep_sorted = cum_before < top_p[:, None]
+    # rank 0 unconditionally: even top_p=0 must leave one sampleable token
+    keep_sorted = keep_sorted.at[:, 0].set(True)
+    bidx = jnp.arange(scaled.shape[0])[:, None]
+    keep = jnp.zeros(scaled.shape, bool).at[bidx, order].set(keep_sorted)
+    return keep
+
+
+def sample_tokens(logits, temperature, top_k, top_p, seed, step):
+    """logits: (B, V) f32/bf16; all params (B,). Returns (B,) int32.
+
+    Rows with temperature <= 0 are greedy; the RNG for row i is
+    fold_in(PRNGKey(seed_i), step_i) — batch-composition independent.
+    """
+    logits = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    after_k = jnp.where(_topk_mask(scaled, top_k), scaled, -jnp.inf)
+    masked = jnp.where(_topp_mask(after_k, top_p), after_k, -jnp.inf)
+
+    keys = jax.vmap(
+        lambda s, t: jax.random.fold_in(jax.random.PRNGKey(s), t)
+    )(seed, step)
+    sampled = jax.vmap(jax.random.categorical)(keys, masked).astype(jnp.int32)
+
+    return jnp.where(temperature > 0.0, sampled, greedy_tok)
+
+
+# --- single-shot convenience wrappers (wave engine / examples / tests) ----
+
+
+def sample_greedy(rng, logits):
+    """logits: (B, 1, V) last-position logits -> (B,) int32."""
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+
+def sample_temperature(rng, logits, temperature: float = 1.0):
+    return jax.random.categorical(
+        rng, logits[:, -1].astype(jnp.float32) / max(temperature, 1e-6)
+    ).astype(jnp.int32)

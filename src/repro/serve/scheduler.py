@@ -1,0 +1,167 @@
+"""Continuous-batching scheduler: admission queue + per-slot state machine.
+
+Pure host-side bookkeeping — no jax in this module — so the policy is unit
+testable without a model. The engine (engine.py) owns the device work and
+drives one `Scheduler` through ticks:
+
+    FREE --admit/bind--> PREFILL --last chunk--> DECODE --EOS/len--> FREE
+
+* Admission is FIFO. A request is bound to a cache-pool slot the moment one
+  is free; its prompt is then fed in fixed-size chunks (one chunk per engine
+  tick, interleaved with decode steps so running requests keep streaming
+  while a long prompt loads).
+* Chunks are RIGHT-ALIGNED: the first chunk is left-padded with position -1
+  tokens (exact no-ops at every layer), so every chunk is shape (1, C), the
+  last real token always sits at index C-1, and chunk count is the only
+  per-request variable — shapes never change, nothing recompiles.
+* Retirement is immediate: the tick a row samples EOS (or hits its token
+  budget / the cache ceiling) it is released, and the next queued request
+  can be admitted into that slot on the same tick's admission pass.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from .sampling import GREEDY, SamplingParams
+
+
+@dataclass
+class Request:
+    """One generation request. `out` accumulates generated token ids;
+    `on_token` (if set) streams each token as it is sampled. Timing fields
+    are wall-clock (perf_counter) and filled by the engine for latency
+    accounting: t_submit at submit, t_first_token at the first sampled
+    token, t_done at retirement."""
+
+    prompt: List[int]
+    max_new_tokens: int = 16
+    sampling: SamplingParams = field(default_factory=lambda: GREEDY)
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+    on_token: Optional[Callable[["Request", int], None]] = None
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+
+# Slot states
+FREE = "free"
+PREFILL = "prefill"
+DECODE = "decode"
+
+
+@dataclass
+class SlotEntry:
+    """Scheduler-side state of one occupied cache-pool slot."""
+
+    slot: int
+    req: Request
+    chunk: int  # prefill chunk size the prompt was split into
+    n_chunks: int
+    left_pad: int  # invalid tokens prepended to the first chunk
+    next_chunk: int = 0
+    pos: int = 0  # absolute position the next input token writes
+    n_generated: int = 0
+    state: str = PREFILL
+
+    def prefill_done(self) -> bool:
+        return self.next_chunk >= self.n_chunks
+
+    def take_chunk(self):
+        """Token ids + positions of the next prompt chunk (lists of length
+        `chunk`; positions are -1 on the left pad)."""
+        assert self.state == PREFILL and not self.prefill_done()
+        j = self.next_chunk
+        p = self.req.prompt
+        toks, poss = [], []
+        for i in range(j * self.chunk, (j + 1) * self.chunk):
+            k = i - self.left_pad  # index into the real prompt
+            if k < 0:
+                toks.append(0)
+                poss.append(-1)
+            else:
+                toks.append(int(p[k]))
+                poss.append(k)
+        self.next_chunk += 1
+        if self.prefill_done():
+            self.state = DECODE
+            self.pos = len(p)
+        return toks, poss
+
+
+class Scheduler:
+    def __init__(self, prefill_chunk: int, max_len: int,
+                 eos_id: Optional[int] = None):
+        assert prefill_chunk >= 1
+        self.prefill_chunk = prefill_chunk
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: deque = deque()
+        self.live: Dict[int, SlotEntry] = {}
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    def has_queued(self) -> bool:
+        return bool(self.queue)
+
+    def pending(self) -> bool:
+        return bool(self.queue or self.live)
+
+    def bind(self, slot: int) -> SlotEntry:
+        """Admit the oldest queued request into `slot` (caller acquired it
+        from the cache pool, i.e. the row is clean)."""
+        req = self.queue.popleft()
+        p = len(req.prompt)
+        assert p >= 1, "empty prompt"
+        c = self.prefill_chunk
+        n_chunks = -(-p // c)
+        entry = SlotEntry(
+            slot=slot, req=req, chunk=c, n_chunks=n_chunks,
+            left_pad=n_chunks * c - p,
+        )
+        self.live[slot] = entry
+        return entry
+
+    # -- tick queries ------------------------------------------------------
+
+    def next_prefill(self) -> Optional[SlotEntry]:
+        """Oldest slot still prefilling (FIFO over bind order — dict
+        preserves insertion order)."""
+        for e in self.live.values():
+            if e.state == PREFILL:
+                return e
+        return None
+
+    def decode_entries(self) -> List[SlotEntry]:
+        return [e for e in self.live.values() if e.state == DECODE]
+
+    # -- retirement --------------------------------------------------------
+
+    def record_token(self, entry: SlotEntry, token: int) -> bool:
+        """Account one sampled token for a DECODE row; returns True if the
+        request retired (caller must release the slot to the pool)."""
+        req = entry.req
+        now = time.perf_counter()
+        if not req.out:
+            req.t_first_token = now
+        req.out.append(token)
+        entry.n_generated += 1
+        if req.on_token is not None:
+            req.on_token(req, token)
+        hit_eos = self.eos_id is not None and token == self.eos_id
+        out_of_budget = entry.n_generated >= req.max_new_tokens
+        cache_full = entry.pos >= self.max_len
+        if hit_eos or out_of_budget or cache_full:
+            req.done = True
+            req.t_done = now
+            del self.live[entry.slot]
+            entry.state = FREE
+            return True
+        return False

@@ -1,0 +1,125 @@
+"""Batched per-request sampler suite (serve/sampling.py)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.sampling import (
+    SamplingParams,
+    sample_tokens,
+    stack_params,
+)
+
+
+def _call(logits, params_list, step=0):
+    sp = stack_params(params_list)
+    steps = np.full((len(params_list),), step, np.int32)
+    return np.asarray(sample_tokens(
+        jnp.asarray(logits, jnp.float32), sp["temperature"], sp["top_k"],
+        sp["top_p"], sp["seed"], steps,
+    ))
+
+
+def test_temperature_zero_degenerates_to_greedy():
+    rng = np.random.RandomState(0)
+    logits = rng.randn(4, 32).astype(np.float32)
+    toks = _call(logits, [SamplingParams(temperature=0.0, seed=i)
+                          for i in range(4)])
+    np.testing.assert_array_equal(toks, logits.argmax(-1))
+
+
+def test_top_k_respected_per_request_in_mixed_batch():
+    """Row 0: top-1 at high temperature (must pick the argmax); row 1:
+    top-k disabled; row 2: greedy. One batched call, three behaviours."""
+    rng = np.random.RandomState(1)
+    logits = rng.randn(3, 64).astype(np.float32)
+    params = [
+        SamplingParams(temperature=5.0, top_k=1, seed=11),
+        SamplingParams(temperature=1.0, seed=12),
+        SamplingParams(temperature=0.0),
+    ]
+    for step in range(20):
+        toks = _call(logits, params, step=step)
+        assert toks[0] == logits[0].argmax()  # top-1 == argmax despite temp
+        assert toks[2] == logits[2].argmax()
+        assert 0 <= toks[1] < 64
+
+
+def test_top_k_limits_support():
+    """With top_k=k, only the k largest logits can ever be sampled."""
+    rng = np.random.RandomState(2)
+    logits = rng.randn(2, 32).astype(np.float32)
+    k = 5
+    allowed = [set(np.argsort(-logits[b])[:k]) for b in range(2)]
+    params = [SamplingParams(temperature=3.0, top_k=k, seed=b)
+              for b in range(2)]
+    for step in range(50):
+        toks = _call(logits, params, step=step)
+        for b in range(2):
+            assert toks[b] in allowed[b], (b, toks[b])
+
+
+def test_top_p_limits_support():
+    """A spiked distribution with top_p=0.5 must only ever sample the
+    spike (its prob ~1 exceeds the nucleus alone)."""
+    logits = np.zeros((2, 16), np.float32)
+    logits[:, 3] = 10.0  # p(3) ~ 0.9998
+    params = [SamplingParams(temperature=1.0, top_p=0.5, seed=b)
+              for b in range(2)]
+    for step in range(20):
+        toks = _call(logits, params, step=step)
+        assert (toks == 3).all()
+
+
+def test_top_p_one_keeps_full_support():
+    """top_p=1.0 must not mask anything: over many draws from a uniform
+    distribution, more than one token appears."""
+    logits = np.zeros((1, 8), np.float32)
+    params = [SamplingParams(temperature=1.0, top_p=1.0, seed=0)]
+    seen = {int(_call(logits, params, step=s)[0]) for s in range(40)}
+    assert len(seen) > 1
+
+
+def test_seeds_reproducible_and_batch_independent():
+    """Row i's stream depends only on (seed_i, step) — not on batch
+    position or on what other rows are doing."""
+    rng = np.random.RandomState(3)
+    row = rng.randn(1, 32).astype(np.float32)
+    p = SamplingParams(temperature=1.0, seed=42)
+
+    solo = [int(_call(row, [p], step=s)[0]) for s in range(8)]
+    # same request in slot 2 of a 4-row batch with unrelated neighbours
+    batch_logits = np.concatenate(
+        [rng.randn(2, 32).astype(np.float32), row,
+         rng.randn(1, 32).astype(np.float32)], 0
+    )
+    others = [SamplingParams(temperature=0.7, top_k=3, seed=7),
+              SamplingParams(temperature=0.0),
+              p,
+              SamplingParams(temperature=1.2, top_p=0.8, seed=9)]
+    batched = [int(_call(batch_logits, others, step=s)[2])
+               for s in range(8)]
+    assert solo == batched
+    # and a different seed gives a different stream
+    p2 = SamplingParams(temperature=1.0, seed=43)
+    other = [int(_call(row, [p2], step=s)[0]) for s in range(8)]
+    assert solo != other
+
+
+def test_top_p_zero_degenerates_to_top1():
+    """top_p=0 must still keep the rank-0 token sampleable."""
+    rng = np.random.RandomState(4)
+    logits = rng.randn(2, 16).astype(np.float32)
+    params = [SamplingParams(temperature=2.0, top_p=0.0, seed=b)
+              for b in range(2)]
+    for step in range(10):
+        toks = _call(logits, params, step=step)
+        np.testing.assert_array_equal(toks, logits.argmax(-1))
+
+
+def test_filters_compose():
+    """top_k and top_p both active: support is the intersection."""
+    logits = np.zeros((1, 16), np.float32)
+    logits[0, :4] = np.array([5.0, 4.9, 4.8, 4.7])
+    # top_k=2 keeps {0,1}; top_p tiny keeps {0}; intersection {0}
+    params = [SamplingParams(temperature=1.0, top_k=2, top_p=0.05, seed=0)]
+    for step in range(20):
+        assert int(_call(logits, params, step=step)[0]) == 0
