@@ -1,26 +1,27 @@
-"""Continuous vs wave batching under a Poisson arrival trace.
+"""Serving benchmark: wave vs contiguous vs paged under a Poisson trace,
+plus a shared-system-prompt trace through the radix prefix cache.
 
 Replays one fixed trace of mixed-length requests (Poisson arrivals,
-uniform prompt lengths and token budgets) through both engines and
-reports throughput (generated tokens / makespan) and per-request latency
-(submit -> done) percentiles:
+uniform prompt lengths and token budgets) through all three engines and
+reports throughput (generated tokens / makespan), per-request latency
+(submit -> done) and TTFT (submit -> first token) percentiles, and peak
+cache memory (peak LIVE-request block footprint for the paged engine vs
+the fixed num_slots x max_len reservation). A second phase serves requests
+sharing one system prompt with the prefix cache cold vs warm and
+measures the TTFT reduction.
 
   PYTHONPATH=src python benchmarks/bench_serve.py            # full trace
   PYTHONPATH=src python benchmarks/bench_serve.py --smoke    # CI-sized
 
-The wave engine admits up to `batch` queued requests, decodes the whole
-wave in lockstep until its longest row finishes, and only then admits
-again — a finished row's slot idles, and a request arriving mid-wave
-waits for the boundary. The continuous engine retires rows and admits
-replacements every tick, so the same trace finishes in fewer model calls
-and each request's latency tracks its own length, not its wave's.
-
-Emits `name,us_per_call,derived` rows (benchmarks/common.py contract)
-plus a human-readable summary.
+Emits `name,us_per_call,derived` rows (benchmarks/common.py contract),
+a human-readable summary, AND machine-readable ``BENCH_serve.json`` at
+the repo root (the perf trajectory the roadmap tracks).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -39,6 +40,8 @@ from repro.serve import (  # noqa: E402
     ServeEngine,
     WaveEngine,
 )
+
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
 def make_trace(n_requests: int, rate: float, seed: int = 0):
@@ -100,18 +103,186 @@ def wave_tick(eng):
     return False
 
 
-def summarize(label, makespan, reqs, decode_steps):
+def summarize(label, makespan, reqs, decode_steps, peak_bytes):
     total_tokens = sum(len(r.out) for r in reqs)
     lat = np.array([r.t_done - r.t_submit for r in reqs])
+    ttft = np.array([r.t_first_token - r.t_submit for r in reqs])
     tps = total_tokens / makespan
     p50, p99 = np.percentile(lat, 50), np.percentile(lat, 99)
+    t50, t99 = np.percentile(ttft, 50), np.percentile(ttft, 99)
     print(f"{label:12s} {total_tokens:5d} tok in {makespan:6.2f}s "
           f"-> {tps:7.1f} tok/s | latency p50 {p50*1e3:7.1f}ms "
-          f"p99 {p99*1e3:7.1f}ms | {decode_steps} decode calls")
+          f"p99 {p99*1e3:7.1f}ms | ttft p50 {t50*1e3:6.1f}ms | "
+          f"{decode_steps} decode calls | peak cache "
+          f"{peak_bytes/1e6:.2f}MB")
     emit(f"serve_{label}_tok_s", 1e6 / max(tps, 1e-9), f"{tps:.1f} tok/s")
     emit(f"serve_{label}_p50", p50 * 1e6, "per-request latency")
     emit(f"serve_{label}_p99", p99 * 1e6, "per-request latency")
-    return tps
+    emit(f"serve_{label}_ttft_p50", t50 * 1e6, "submit->first token")
+    return {
+        "tok_s": tps,
+        "total_tokens": total_tokens,
+        "makespan_s": makespan,
+        "latency_p50_s": float(p50),
+        "latency_p99_s": float(p99),
+        "ttft_p50_s": float(t50),
+        "ttft_p99_s": float(t99),
+        "decode_calls": int(decode_steps),
+        "peak_cache_bytes": int(peak_bytes),
+    }
+
+
+def bench_prefix_cache(cfg, params, batch, max_len, n_warm: int):
+    """Shared-system-prompt trace: one cold request populates the radix
+    tree, `n_warm` same-prefix requests ride it. Requests run one at a
+    time so TTFT measures prefill work, not queueing."""
+    sys_prompt = list(np.random.RandomState(7).randint(1, 200, size=48))
+    eng = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                      backend="paged", block_size=16, prefill_chunk=16)
+    if eng.backend.prefix is None:  # SSM/hybrid archs: no prefix sharing
+        print("prefix-cache  n/a (recurrent SSM state is not "
+              "block-addressable on this arch)")
+        return None
+    # compile warmup on a disjoint prompt (prefix cache stays cold for
+    # the measured system prompt)
+    eng.submit(Request(prompt=[201, 202, 203], max_new_tokens=2))
+    eng.run()
+
+    def one(suffix):
+        r = Request(prompt=sys_prompt + suffix, max_new_tokens=4)
+        eng.submit(r)
+        eng.run()
+        return r.t_first_token - r.t_submit
+
+    cold_ttft = one([1, 2, 3])
+    warm = [one([i + 10, i + 20]) for i in range(n_warm)]
+    warm_ttft = float(np.median(warm))
+    reduction = cold_ttft / max(warm_ttft, 1e-9)
+    print(f"prefix-cache  cold TTFT {cold_ttft*1e3:6.1f}ms  warm "
+          f"{warm_ttft*1e3:6.1f}ms  ({reduction:.1f}x, "
+          f"{eng.backend.prefix.hits} block hits)")
+    emit("serve_prefix_cold_ttft", cold_ttft * 1e6, "48-tok system prompt")
+    emit("serve_prefix_warm_ttft", warm_ttft * 1e6,
+         f"{reduction:.1f}x reduction")
+    return {
+        "system_prompt_tokens": len(sys_prompt),
+        "cold_ttft_s": float(cold_ttft),
+        "warm_ttft_p50_s": warm_ttft,
+        "ttft_reduction": float(reduction),
+        "block_hits": int(eng.backend.prefix.hits),
+    }
+
+
+def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
+              rate=8.0, smoke=False, block_size=16, num_blocks=None):
+    cfg = reduced(get_config(arch))
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    trace = make_trace(requests, rate)
+    if num_blocks is None:
+        # capacity parity with the contiguous reservation: the reported
+        # peak is the LIVE-request block footprint (tree-retained blocks
+        # are reclaimable cache), so the memory ratio reflects traffic,
+        # not the configured pool size
+        num_blocks = batch * (-(-max_len // block_size)) + 1
+    print(f"arch={arch} (reduced) requests={requests} "
+          f"batch={batch} rate={rate}/s max_len={max_len} "
+          f"paged pool={num_blocks - 1} x {block_size}-token blocks")
+
+    def build(kind):
+        if kind == "wave":
+            return WaveEngine(cfg, params, batch_size=batch,
+                              max_len=max_len)
+        if kind == "contiguous":
+            return ServeEngine(cfg, params, batch_size=batch,
+                               max_len=max_len)
+        return ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                           backend="paged", block_size=block_size,
+                           num_blocks=num_blocks)
+
+    results = {}
+    for kind, tick in (("wave", wave_tick), ("continuous", continuous_tick),
+                       ("paged", continuous_tick)):
+        eng = build("contiguous" if kind == "continuous" else kind)
+        # Warm THIS instance on a throwaway request: jax.jit caches are
+        # per-closure, so compiles on a separate warm engine would be
+        # discarded and the measured replay would pay them instead. Then
+        # zero the counters so the reported stats carry only the trace.
+        eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=2))
+        eng.run()
+        eng.decode_steps = 0
+        if kind == "paged":
+            eng.backend.live_block_hw = 0
+            eng.backend.mgr.high_water = eng.backend.mgr.num_used
+            if eng.backend.prefix is not None:
+                eng.backend.prefix.hits = eng.backend.prefix.misses = 0
+        mk, reqs = replay(eng, trace, tick)
+        results[kind] = summarize(kind, mk, reqs, eng.decode_steps,
+                                  eng.peak_cache_bytes())
+        if kind == "paged":
+            results[kind]["pool_high_water_blocks"] = (
+                eng.backend.mgr.high_water
+            )
+            results[kind]["live_block_high_water"] = (
+                eng.backend.live_block_hw
+            )
+        if kind != "wave":
+            sizes = eng.jit_cache_sizes()
+            assert sizes[0] == 1, f"{kind} decode recompiled: {sizes}"
+
+    prefix = bench_prefix_cache(cfg, params, batch, max_len,
+                                n_warm=3 if smoke else 8)
+
+    speedup = results["continuous"]["tok_s"] / max(
+        results["wave"]["tok_s"], 1e-9
+    )
+    mem_ratio = results["paged"]["peak_cache_bytes"] / max(
+        results["continuous"]["peak_cache_bytes"], 1
+    )
+    print(f"continuous/wave throughput: {speedup:.2f}x | "
+          f"paged/contiguous peak cache: {mem_ratio:.2f}x")
+    emit("serve_speedup", speedup * 1e6, "continuous/wave tok/s ratio")
+    emit("serve_paged_mem_ratio", mem_ratio * 1e6,
+         "paged/contiguous peak cache bytes")
+
+    # Smoke runs keep their own artifact: `benchmarks/run.py` and CI must
+    # not clobber the full-trace perf trajectory with 8-request numbers.
+    json_path = os.path.join(
+        _REPO_ROOT, "BENCH_serve.smoke.json" if smoke else "BENCH_serve.json"
+    )
+    payload = {
+        "bench": "serve",
+        "arch": arch,
+        "reduced": True,
+        "requests": requests,
+        "batch": batch,
+        "max_len": max_len,
+        "rate_req_s": rate,
+        "block_size": block_size,
+        "smoke": smoke,
+        "engines": results,
+        "prefix_cache": prefix,
+        "continuous_over_wave_tok_s": float(speedup),
+        "paged_over_contiguous_peak_cache": float(mem_ratio),
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(json_path)}")
+
+    if not smoke:
+        if speedup <= 1.0:
+            raise SystemExit("continuous batching did not beat wave")
+        if prefix is not None and prefix["ttft_reduction"] < 2.0:
+            raise SystemExit(
+                f"prefix cache TTFT reduction {prefix['ttft_reduction']:.2f}x "
+                "< 2x acceptance bar"
+            )
+    return payload
+
+
+def run():
+    """benchmarks/run.py entry point (CI-sized)."""
+    run_bench(requests=8, smoke=True)
 
 
 def main():
@@ -119,49 +290,21 @@ def main():
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--rate", type=float, default=8.0,
                     help="Poisson arrival rate (req/s)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged pool size (default: parity with the "
+                         "contiguous reservation)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized: 8 requests, skips nothing else")
+                    help="CI-sized: 8 requests, no perf gates")
     args = ap.parse_args()
-    if args.smoke:
-        args.requests = 8
-
-    cfg = reduced(get_config(args.arch))
-    params = lm_init(jax.random.PRNGKey(0), cfg)
-    trace = make_trace(args.requests, args.rate)
-    print(f"arch={args.arch} (reduced) requests={args.requests} "
-          f"batch={args.batch} rate={args.rate}/s")
-
-    # Warm both engines on a throwaway request so compile time (identical
-    # one-off cost for both) does not skew the trace replay.
-    for build in (
-        lambda: ServeEngine(cfg, params, batch_size=args.batch,
-                            max_len=args.max_len),
-        lambda: WaveEngine(cfg, params, batch_size=args.batch,
-                           max_len=args.max_len),
-    ):
-        eng = build()
-        eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=2))
-        eng.run()
-
-    wave = WaveEngine(cfg, params, batch_size=args.batch,
-                      max_len=args.max_len)
-    mk_w, reqs_w = replay(wave, trace, wave_tick)
-    tps_w = summarize("wave", mk_w, reqs_w, wave.decode_steps)
-
-    cont = ServeEngine(cfg, params, batch_size=args.batch,
-                       max_len=args.max_len)
-    mk_c, reqs_c = replay(cont, trace, continuous_tick)
-    tps_c = summarize("continuous", mk_c, reqs_c, cont.decode_steps)
-
-    assert cont._decode._cache_size() == 1, "decode recompiled mid-trace"
-    speedup = tps_c / max(tps_w, 1e-9)
-    print(f"continuous/wave throughput: {speedup:.2f}x")
-    emit("serve_speedup", speedup * 1e6, "continuous/wave tok/s ratio")
-    if not args.smoke and speedup <= 1.0:
-        raise SystemExit("continuous batching did not beat wave batching")
+    run_bench(arch=args.arch,
+              requests=8 if args.smoke else args.requests,
+              batch=args.batch, max_len=args.max_len, rate=args.rate,
+              smoke=args.smoke, block_size=args.block_size,
+              num_blocks=args.num_blocks)
 
 
 if __name__ == "__main__":

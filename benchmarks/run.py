@@ -6,6 +6,10 @@
   * bench_pareto          — Fig. 3 (cost/quality points, micro)
   * bench_kernels         — fused kernel HBM-traffic model + jnp timing
   * bench_inspection      — §5/Fig. 9 routing statistics
+  * bench_serve           — wave/contiguous/paged engines + prefix cache
+                            (CI-sized here, writing BENCH_serve.smoke.json;
+                            run `benchmarks/bench_serve.py` directly for
+                            the full trace that refreshes BENCH_serve.json)
 
 Prints ``name,us_per_call,derived`` CSV. Roofline tables render separately
 via ``python -m benchmarks.roofline_table results/<file>.jsonl``.
@@ -24,6 +28,7 @@ def main() -> None:
         bench_inspection,
         bench_kernels,
         bench_pareto,
+        bench_serve,
     )
 
     mods = {
@@ -33,6 +38,7 @@ def main() -> None:
         "pareto": bench_pareto,
         "kernels": bench_kernels,
         "inspection": bench_inspection,
+        "serve": bench_serve,
     }
     print("name,us_per_call,derived")
     for name, mod in mods.items():

@@ -1,6 +1,8 @@
 """Serve a small LM through the continuous-batching engine.
 
   PYTHONPATH=src python examples/serve_lm.py --arch qwen2-0.5b --requests 6
+  PYTHONPATH=src python examples/serve_lm.py --paged --block-size 16 \
+      --shared-prefix 32          # paged backend + radix prefix cache
 
 Uses the reduced config (random weights — this demonstrates the serving
 machinery): requests with mixed prompt lengths, token budgets, and
@@ -32,22 +34,47 @@ def main():
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--stream", action="store_true",
                     help="print each token as it is sampled")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged block-manager backend")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged backend)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="total pool blocks (default: contiguous parity)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="radix-tree prefix sharing (paged; default on)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared system-prompt tokens "
+                         "to every request (exercises the radix cache)")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
     print(f"serving {args.arch} (reduced: {cfg.num_layers}L "
           f"d={cfg.d_model}, vocab={cfg.vocab_size})")
     params = lm_init(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=128)
+    kw = {}
+    if args.paged:
+        kw = dict(backend="paged", block_size=args.block_size,
+                  num_blocks=args.num_blocks,
+                  prefix_cache=args.prefix_cache)
+        print(f"paged backend: block_size={args.block_size} "
+              f"prefix_cache={args.prefix_cache}")
+    eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=128, **kw)
 
     def stream(req, tok):
         print(f"  req[{req.sampling.seed}] += {tok}")
 
     rng = jax.random.PRNGKey(1)
+    shared = list(
+        jax.random.randint(jax.random.PRNGKey(2), (args.shared_prefix,),
+                           1, cfg.vocab_size).tolist()
+    )
     reqs = []
     for i in range(args.requests):
         rng, r = jax.random.split(rng)
-        prompt = list(
+        prompt = shared + list(
             jax.random.randint(r, (4 + i % 5,), 1, cfg.vocab_size).tolist()
         )
         req = Request(
@@ -71,6 +98,13 @@ def main():
     print(f"{args.requests} requests, {steps} decode steps, "
           f"{total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s on CPU)")
+    if args.paged:
+        print(f"peak cache {eng.peak_cache_bytes()/1e6:.2f}MB "
+              f"(live high-water {eng.backend.live_block_hw} blocks; "
+              f"pool high-water {eng.backend.mgr.high_water})")
+        if eng.backend.prefix is not None:
+            print(f"prefix cache: {eng.backend.prefix.hits} block hits, "
+                  f"{eng.backend.prefix.misses} cold lookups")
 
 
 if __name__ == "__main__":

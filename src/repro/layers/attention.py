@@ -76,6 +76,39 @@ def init_kv_cache(cfg, batch: int, length: int, is_global: bool,
     }
 
 
+def init_paged_kv_cache(cfg, num_blocks: int, block_size: int,
+                        dtype=jnp.bfloat16):
+    """Paged cache for one layer: one pool of ``num_blocks`` fixed-size
+    token blocks shared by ALL rows (serve/block_manager.py hands blocks
+    out). Leading dim indexes physical blocks, not batch rows — a request
+    reaches its tokens through a per-row block table.
+
+    Unlike the contiguous cache there is no ring: sliding-window layers
+    store every position and rely on the window term of `make_mask`
+    (paging already bounds memory by tokens actually written, which is
+    the job the ring did). Block 0 is reserved as the NULL block — its
+    `pos` stays -1 forever, so unallocated table entries gather only
+    masked-out keys."""
+    a = cfg.attention
+    if a.kind == "mla":
+        return {
+            "ckv": jnp.zeros((num_blocks, block_size, a.kv_lora_rank), dtype),
+            "krope": jnp.zeros(
+                (num_blocks, block_size, a.qk_rope_head_dim), dtype
+            ),
+            "pos": jnp.full((num_blocks, block_size), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(
+            (num_blocks, block_size, a.num_kv_heads, a.head_dim), dtype
+        ),
+        "v": jnp.zeros(
+            (num_blocks, block_size, a.num_kv_heads, a.head_dim), dtype
+        ),
+        "pos": jnp.full((num_blocks, block_size), -1, jnp.int32),
+    }
+
+
 def _attend(q, k, v, mask, scale: Optional[float] = None):
     """q: (B,Sq,H,Dk); k: (B,Sk,G,Dk); v: (B,Sk,G,Dv) grouped;
     mask: (B,Sq,Sk) bool or None. Dv may differ from Dk (MLA latent)."""
@@ -190,6 +223,73 @@ def _ring_update(cache, new_vals: dict, positions):
     return out
 
 
+def _paged_update(cache, new_vals: dict, positions, tables):
+    """Scatter `new_vals[name]` (B,S,...) into the paged pool through the
+    per-row block tables.
+
+    cache leaves: (num_blocks, block_size, ...); tables: (B, blocks_per_row)
+    physical block ids (0 = null); positions: (S,) shared or (B,S) per row.
+    Token at position p of row b lands in physical block
+    ``tables[b, p // block_size]`` at offset ``p % block_size``. Tokens with
+    position < 0 — and positions whose table entry is still the null
+    block — scatter to the out-of-bounds block `num_blocks`, which
+    mode="drop" discards: the same predicated-write trick `_ring_update`
+    uses, so inactive rows and left-pad tokens stay exact no-ops."""
+    nb_total, bs_blk = cache["pos"].shape
+    b = tables.shape[0]
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None], (b, positions.shape[0]))
+    logical = jnp.clip(
+        jnp.where(positions >= 0, positions // bs_blk, 0),
+        0, tables.shape[1] - 1,
+    )
+    phys = jnp.take_along_axis(tables, logical, axis=1)  # (B,S)
+    ok = (positions >= 0) & (phys > 0)
+    phys = jnp.where(ok, phys, nb_total)  # OOB -> dropped
+    off = jnp.where(ok, positions % bs_blk, 0)
+    out = dict(cache)
+    for name, val in new_vals.items():
+        out[name] = cache[name].at[phys, off].set(
+            val.astype(cache[name].dtype), mode="drop"
+        )
+    out["pos"] = cache["pos"].at[phys, off].set(positions, mode="drop")
+    return out
+
+
+def _paged_view(cache, tables):
+    """Gather a per-row (B, blocks_per_row * block_size, ...) KV view out
+    of the paged pool. Entries in logical-position order, so downstream
+    masking/attention is identical to the contiguous layout; null-block
+    entries carry pos -1 and mask out."""
+    b, nb = tables.shape
+    bs_blk = cache["pos"].shape[1]
+    names = [n for n in cache if n != "pos"]
+    vals = [
+        cache[n][tables].reshape((b, nb * bs_blk) + cache[n].shape[2:])
+        for n in names
+    ]
+    kpos = cache["pos"][tables].reshape(b, nb * bs_blk)
+    return dict(zip(names, vals)), kpos
+
+
+def reset_block_pos(cache, blocks):
+    """Invalidate a fixed-width batch of physical blocks (pos -> -1); pad
+    `blocks` with out-of-range ids (mode="drop" discards them). Jit-safe —
+    `blocks` is a (W,) traced int array, so alloc-time clears of any count
+    run through one compiled program."""
+    return dict(cache, pos=cache["pos"].at[blocks].set(-1, mode="drop"))
+
+
+def copy_kv_blocks(cache, src, dst):
+    """Copy physical blocks src[i] -> dst[i] (copy-on-write fork). src/dst
+    are (W,) traced int arrays padded with out-of-range ids; padded lanes
+    read clamped garbage but scatter out-of-bounds, so they drop."""
+    out = dict(cache)
+    for name, val in cache.items():
+        out[name] = val.at[dst].set(val[src], mode="drop")
+    return out
+
+
 def reset_kv_rows(cache, row):
     """Invalidate row(s) of one layer's KV cache: pos -> -1. The stale K/V
     values stay in memory — they are unreachable because make_mask admits
@@ -199,10 +299,13 @@ def reset_kv_rows(cache, row):
 
 
 def gqa_apply(params, cfg, x, *, layer_is_global: bool = True,
-              positions=None, cache=None, mode: str = "train"):
+              positions=None, cache=None, mode: str = "train",
+              block_tables=None):
     """Returns (out, new_cache). positions: (S,) shared or (B,S) per-row
     absolute token positions; entries < 0 are pad/inactive (no cache write,
-    masked from attention)."""
+    masked from attention). With ``block_tables`` (B, blocks_per_row) the
+    cache is a paged block pool (init_paged_kv_cache) addressed through the
+    tables instead of a per-row contiguous ring."""
     a = cfg.attention
     b, s, _ = x.shape
     if positions is None:
@@ -223,6 +326,15 @@ def gqa_apply(params, cfg, x, *, layer_is_global: bool = True,
 
     if cache is None:
         k_all, v_all, kpos = k, v, positions
+    elif block_tables is not None:
+        # Paged path: scatter this call's KV through the block tables,
+        # then gather the row views back (write-then-read keeps chunked
+        # prefill self-attending, exactly like the ring path below).
+        assert mode != "prefill", "paged cache serves chunked prefill only"
+        cache = _paged_update(cache, {"k": k, "v": v}, positions,
+                              block_tables)
+        gathered, kpos = _paged_view(cache, block_tables)
+        k_all, v_all = gathered["k"], gathered["v"]
     else:
         cache = _ring_update(cache, {"k": k, "v": v}, positions)
         if s > 1 and mode == "prefill":
@@ -280,7 +392,8 @@ def mla_init(rng, cfg):
 
 
 def mla_apply(params, cfg, x, *, positions=None, cache=None,
-              mode: str = "train", layer_is_global: bool = True):
+              mode: str = "train", layer_is_global: bool = True,
+              block_tables=None):
     """MLA with compressed-KV cache. Decode uses the *absorbed* form:
     q_nope is projected into the latent rank space so attention scores are
     computed against the (B, S, rank) cache directly — no per-step
@@ -305,7 +418,13 @@ def mla_apply(params, cfg, x, *, positions=None, cache=None,
 
     scale = 1.0 / float(a.qk_nope_head_dim + a.qk_rope_head_dim) ** 0.5
 
-    if cache is not None:
+    if cache is not None and block_tables is not None:
+        assert mode != "prefill", "paged cache serves chunked prefill only"
+        cache = _paged_update(cache, {"ckv": ckv, "krope": krope},
+                              positions, block_tables)
+        gathered, kpos = _paged_view(cache, block_tables)
+        ckv_all, krope_all = gathered["ckv"], gathered["krope"]
+    elif cache is not None:
         cache = _ring_update(cache, {"ckv": ckv, "krope": krope}, positions)
         if s > 1 and mode == "prefill":
             # whole-prompt prefill: attend input latents (see gqa_apply)

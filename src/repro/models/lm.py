@@ -68,9 +68,12 @@ def block_init(rng, cfg, is_moe: bool):
 
 def block_apply(params, cfg, x, *, is_moe: bool, is_global=True,
                 positions=None, cache=None, mode: str = "train",
-                use_kernel: bool = False):
+                use_kernel: bool = False, block_tables=None):
     """Returns (y, new_cache, aux). `is_global` may be a traced bool (scan
-    over gemma3's 5-local:1-global pattern with shared weights)."""
+    over gemma3's 5-local:1-global pattern with shared weights).
+    ``block_tables`` (B, blocks_per_row) switches attention caches to the
+    paged block-pool layout (shared by every layer — all attention layers
+    write the same positions)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache = {} if cache is not None else None
     xn = norm_apply(params["norm1"], cfg, x)
@@ -80,7 +83,7 @@ def block_apply(params, cfg, x, *, is_moe: bool, is_global=True,
             params["attn"], cfg, xn,
             layer_is_global=is_global, positions=positions,
             cache=None if cache is None else cache.get("attn"),
-            mode=mode,
+            mode=mode, block_tables=block_tables,
         )
         mix = mix + a_out
         if new_cache is not None:
@@ -180,7 +183,7 @@ def _scan_segment(seg_params, cfg, x, flags, is_moe, use_kernel, positions):
 
 
 def _unrolled_segment(seg_params, cfg, x, start, count, is_moe, caches,
-                      positions, mode, use_kernel):
+                      positions, mode, use_kernel, block_tables=None):
     """Python loop (serving path / scan_layers=False): heterogeneous caches."""
     aux = jnp.zeros((), jnp.float32)
     new_caches = []
@@ -195,7 +198,7 @@ def _unrolled_segment(seg_params, cfg, x, start, count, is_moe, caches,
         x, c, a = block_apply(
             p, cfg, x, is_moe=is_moe, is_global=is_global,
             positions=positions, cache=cache_j, mode=mode,
-            use_kernel=use_kernel,
+            use_kernel=use_kernel, block_tables=block_tables,
         )
         aux = aux + a
         new_caches.append(c)
@@ -204,13 +207,15 @@ def _unrolled_segment(seg_params, cfg, x, start, count, is_moe, caches,
 
 def lm_apply(params, cfg, tokens, *, embeds=None, positions=None,
              cache=None, mode: str = "train", use_kernel: bool = False,
-             last_only: bool = False):
+             last_only: bool = False, block_tables=None):
     """tokens: (B, S) int32; embeds: (B, N, E) frontend stub (vlm);
     positions: (S,) shared or (B, S) per-row (continuous-batching decode —
     entries < 0 mark pad/inactive tokens that neither write nor read any
-    cache). Returns (logits, new_cache, aux). ``last_only`` unembeds only
-    the final position — prefill needs one next-token distribution, not
-    S×vocab logits (at qwen2-72b:prefill_32k the full-logit tensor is
+    cache). ``block_tables`` (B, blocks_per_row) makes every attention
+    cache a paged block pool (serve/block_manager.py) addressed through
+    the tables. Returns (logits, new_cache, aux). ``last_only`` unembeds
+    only the final position — prefill needs one next-token distribution,
+    not S×vocab logits (at qwen2-72b:prefill_32k the full-logit tensor is
     32×32768×152064 f32 ≈ 638GB global)."""
     dtype = jnp.dtype(cfg.dtype)
     x = embed(params["embed"], tokens, dtype)
@@ -237,7 +242,7 @@ def lm_apply(params, cfg, tokens, *, embeds=None, positions=None,
         for seg_params, (start, count, is_moe) in zip(params["segments"], segs):
             x, a, cs = _unrolled_segment(
                 seg_params, cfg, x, start, count, is_moe, cache,
-                positions, mode, use_kernel,
+                positions, mode, use_kernel, block_tables,
             )
             aux = aux + a
             new_cache.extend(cs)

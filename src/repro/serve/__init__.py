@@ -1,18 +1,38 @@
-"""Serving subsystem: continuous batching over a per-row KV/SSM cache pool.
+"""Serving subsystem: continuous batching over pluggable cache backends.
 
 Layering (docs/serving.md has the full design):
-  cache_pool — slot allocator over one fixed-shape device cache
-  sampling   — batched per-request sampler suite (greedy/temp/top-k/top-p)
-  scheduler  — host-side admission queue + slot state machine
-  engine     — ServeEngine (continuous) / WaveEngine (lockstep baseline)
+  cache_pool    — CacheBackend interface + contiguous slot-row backend
+  block_manager — paged backend: KV token blocks, refcounts/COW, tables
+  prefix_cache  — radix tree mapping token prefixes to shared block chains
+  programs      — the jitted device programs (contiguous + paged)
+  sampling      — batched per-request sampler suite (greedy/temp/top-k/top-p)
+  scheduler     — host-side admission queue + slot state machine
+  engine        — ServeEngine (continuous) / WaveEngine (lockstep baseline)
 """
-from .cache_pool import CachePool, clear_slot, pool_row, pool_write_row  # noqa: F401
+from .block_manager import (  # noqa: F401
+    BlockManager,
+    PagedBackend,
+    init_paged_cache,
+)
+from .cache_pool import (  # noqa: F401
+    CacheBackend,
+    CachePool,
+    ContiguousBackend,
+    clear_slot,
+    pool_row,
+    pool_write_row,
+)
 from .engine import (  # noqa: F401
     ServeEngine,
     WaveEngine,
     make_decode_step,
     make_prefill_chunk_step,
     make_prefill_step,
+)
+from .prefix_cache import RadixPrefixCache  # noqa: F401
+from .programs import (  # noqa: F401
+    make_decode_step_paged,
+    make_prefill_chunk_paged,
 )
 from .sampling import (  # noqa: F401
     GREEDY,

@@ -107,3 +107,126 @@ class CachePool:
         cleared lazily at the next acquire)."""
         assert slot not in self._free, f"double release of slot {slot}"
         self._free.append(slot)
+
+
+# ---------------------------------------------------------------------------
+# Cache backends: the interface ServeEngine drives
+# ---------------------------------------------------------------------------
+
+
+class CacheBackend:
+    """Serving-memory backend interface. Two implementations:
+
+    * ``ContiguousBackend`` (below): one `max_len` row per slot — simple,
+      bit-exact, the correctness oracle and bench baseline.
+    * ``PagedBackend`` (serve/block_manager.py): fixed-size token blocks
+      with per-request tables, copy-on-write refcounts, and a radix-tree
+      prefix cache.
+
+    The engine only ever calls these methods; every device program behind
+    them has one fixed signature (zero recompiles under churn).
+    """
+
+    num_free_slots: int
+    max_chunk: int
+
+    def accepts(self, prompt_len: int, max_new: int) -> bool:
+        """Can this request EVER fit (submit-time validation)?"""
+        raise NotImplementedError
+
+    def try_admit(self, req):
+        """Admit `req` if memory allows: returns (slot, cached_len) —
+        cached_len > 0 when a prefix-cache hit lets prefill skip the
+        first tokens — or None to leave it queued."""
+        raise NotImplementedError
+
+    def prefill_chunk(self, params, buf, slot: int, toks, poss):
+        """Run one prompt chunk for `slot`; returns the updated logits
+        buffer (cache updates stay inside the backend)."""
+        raise NotImplementedError
+
+    def prefill_finished(self, entry):
+        """Hook fired when a request's last prompt chunk has run."""
+
+    def ensure_decode_block(self, slot: int, pos: int) -> bool:
+        """Guarantee position `pos` of `slot` is writable before a decode
+        step; False means out of memory (the engine preempts the row)."""
+        return True
+
+    def decode(self, params, toks, pos):
+        """One batched decode step over all slots; returns logits."""
+        raise NotImplementedError
+
+    def retire(self, slot: int):
+        """Release every resource `slot` holds."""
+        raise NotImplementedError
+
+    def jit_cache_sizes(self) -> tuple:
+        """Compiled-signature counts of the backend's device programs
+        (frozen after warmup == zero recompiles)."""
+        raise NotImplementedError
+
+    def peak_cache_bytes(self) -> int:
+        """High-water cache memory this backend actually needed."""
+        raise NotImplementedError
+
+
+class ContiguousBackend(CacheBackend):
+    """`CachePool` behind the CacheBackend interface: admission == a free
+    slot, memory == num_slots x max_len whatever the traffic."""
+
+    def __init__(self, cfg, num_slots: int, max_len: int,
+                 dtype=jnp.bfloat16):
+        from .programs import make_decode_step, make_prefill_chunk_step
+
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.pool = CachePool(cfg, num_slots, max_len, dtype)
+        # Donate the cache (and logits buffer) so XLA aliases them in
+        # place instead of materializing a second full pool every tick
+        # (no-op on CPU, which lacks donation — a one-time warning).
+        self._prefill_chunk = jax.jit(
+            make_prefill_chunk_step(cfg), donate_argnums=(1, 2)
+        )
+        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(3,))
+
+    @property
+    def num_free_slots(self) -> int:
+        return self.pool.num_free
+
+    @property
+    def max_chunk(self) -> int:
+        return self.pool.min_ring_len
+
+    def accepts(self, prompt_len: int, max_new: int) -> bool:
+        return prompt_len + max_new <= self.max_len
+
+    def try_admit(self, req):
+        slot = self.pool.acquire()
+        return None if slot is None else (slot, 0)
+
+    def prefill_chunk(self, params, buf, slot, toks, poss):
+        self.pool.cache, buf = self._prefill_chunk(
+            params, self.pool.cache, buf, jnp.int32(slot),
+            jnp.asarray([toks], jnp.int32), jnp.asarray([poss], jnp.int32),
+        )
+        return buf
+
+    def decode(self, params, toks, pos):
+        logits, self.pool.cache = self._decode(
+            params, toks, pos, self.pool.cache
+        )
+        return logits
+
+    def retire(self, slot: int):
+        self.pool.release(slot)
+
+    def jit_cache_sizes(self) -> tuple:
+        return (self._decode._cache_size(),
+                self._prefill_chunk._cache_size(),
+                self.pool._clear._cache_size())
+
+    def peak_cache_bytes(self) -> int:
+        return sum(leaf.nbytes
+                   for leaf in jax.tree_util.tree_leaves(self.pool.cache))

@@ -1,27 +1,28 @@
-"""Serving engines over the per-row KV/SSM cache pool.
+"""Serving engines over pluggable cache backends.
 
 ``ServeEngine`` is the continuous-batching engine: requests are admitted
-the moment a cache-pool slot frees, prompts prefill in fixed-size chunks
-interleaved with decode steps, every decode tick advances ALL live rows in
-one batched model call, and a row retires (slot released, next request
-admitted) the tick it samples EOS or exhausts its budget. Sampling is the
-batched per-request suite from sampling.py.
+the moment the cache backend has memory for them, prompts prefill in
+fixed-size chunks interleaved with decode steps, every decode tick
+advances ALL live rows in one batched model call, and a row retires (its
+memory released, the next request admitted) the tick it samples EOS or
+exhausts its budget. Sampling is the batched per-request suite from
+sampling.py.
 
-Three jitted device programs run the whole serving loop, each with ONE
-fixed shape — request churn never triggers a recompile (asserted via
-``jax.jit`` cache stats in tests/test_serve.py):
+The engine is memory-layout agnostic: it drives a ``CacheBackend``
+(serve/cache_pool.py defines the interface) and two are provided —
 
-* prefill-chunk: (params, pool, logits_buf, slot, tokens(1,C), pos(1,C))
-  — slices the slot's batch-1 cache row out of the pool, runs the model in
-  chunked-prefill mode (attends prior chunks through the cache), scatters
-  the row back, and on every chunk writes the last-position logits into
-  row `slot` of the persistent (num_slots, vocab) logits buffer (only the
-  final chunk's write is ever consumed).
-* decode: (params, pool, tokens(B,1), positions(B,)) — one token for every
-  slot; inactive rows carry position -1, which the model turns into a
-  no-op (no cache write, no state update, masked from attention).
-* sample: sampling.sample_tokens over the logits buffer with per-slot
-  parameter arrays.
+* ``backend="contiguous"``: one max_len cache row per slot. Admission
+  needs a free slot. Bit-exact baseline and correctness oracle.
+* ``backend="paged"``: fixed-size KV token blocks with per-request block
+  tables, copy-on-write refcounts and a radix-tree prefix cache
+  (serve/block_manager.py, serve/prefix_cache.py). Admission needs a
+  free slot AND free blocks for the *uncached* part of the prompt;
+  decode allocates blocks incrementally and preempts (requeues) a row
+  if memory truly runs dry.
+
+Every device program behind either backend has ONE fixed signature —
+request churn never triggers a recompile (asserted via ``jax.jit`` cache
+stats in tests/test_serve.py and tests/test_serve_paged.py).
 
 ``WaveEngine`` keeps the old wave-synchronous behaviour (admit a full
 batch, decode in lockstep, free slots only at the wave boundary) as the
@@ -37,68 +38,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import init_cache, lm_apply
-from .cache_pool import CachePool, pool_row, pool_write_row
+from .block_manager import PagedBackend
+from .cache_pool import ContiguousBackend
+from .programs import (  # noqa: F401  (re-exported; launch/specs.py uses)
+    make_decode_step,
+    make_prefill_chunk_step,
+    make_prefill_step,
+)
 from .sampling import GREEDY, SamplingParams, sample_tokens
 from .scheduler import Request, Scheduler
-
-
-# ---------------------------------------------------------------------------
-# jitted step factories (also lowered standalone by launch/specs.py)
-# ---------------------------------------------------------------------------
-
-
-def make_prefill_step(cfg, max_len: int):
-    """Whole-prompt prefill: (params, tokens(B,S), cache) ->
-    (logits(B,1,V), cache). Shared positions arange(S) — the wave path and
-    the dry-run's prefill cells."""
-
-    def prefill(params, tokens, cache):
-        s = tokens.shape[1]
-        logits, cache, _ = lm_apply(
-            params, cfg, tokens, positions=jnp.arange(s), cache=cache,
-            mode="prefill", last_only=True,
-        )
-        return logits, cache
-
-    return prefill
-
-
-def make_decode_step(cfg):
-    """(params, tokens(B,1), pos(B,), cache) -> (logits(B,1,V), cache).
-    Per-row positions; rows with pos<0 are inactive no-ops."""
-
-    def decode(params, tokens, pos, cache):
-        logits, cache, _ = lm_apply(
-            params, cfg, tokens, positions=pos[:, None], cache=cache,
-            mode="decode",
-        )
-        return logits, cache
-
-    return decode
-
-
-def make_prefill_chunk_step(cfg):
-    """Chunked prefill into one pool slot: (params, pool_cache, logits_buf,
-    slot, tokens(1,C), positions(1,C)) -> (pool_cache, logits_buf).
-
-    mode="decode" with S>1 makes attention read prior chunks back out of
-    the cache (and the SSM paths continue from their recurrent state), so
-    chunks compose exactly; left-pad tokens carry position -1 and touch
-    nothing."""
-
-    def prefill_chunk(params, cache, buf, slot, tokens, positions):
-        row = pool_row(cache, slot)
-        logits, row, _ = lm_apply(
-            params, cfg, tokens, positions=positions, cache=row,
-            mode="decode", last_only=True,
-        )
-        cache = pool_write_row(cache, slot, row)
-        buf = jax.lax.dynamic_update_slice_in_dim(
-            buf, logits[:, -1].astype(buf.dtype), slot, axis=0
-        )
-        return cache, buf
-
-    return prefill_chunk
 
 
 # ---------------------------------------------------------------------------
@@ -109,17 +57,24 @@ def make_prefill_chunk_step(cfg):
 class ServeEngine:
     """Continuous-batching serving engine.
 
-    batch_size is the number of cache-pool slots (= max concurrent
-    requests); max_len caps prompt+generation per request. Per-request
-    sampling comes from Request.sampling; ``default_sampling`` fills in
-    for requests that keep the dataclass default.
+    batch_size is the number of decode rows (= max concurrent requests);
+    max_len caps prompt+generation per request. Per-request sampling
+    comes from Request.sampling; ``default_sampling`` fills in for
+    requests that keep the dataclass default.
+
+    backend="paged" extras: ``block_size`` tokens per KV block,
+    ``num_blocks`` total pool blocks (default: capacity parity with the
+    contiguous pool), ``prefix_cache`` to share common prompt prefixes
+    through the radix tree.
     """
 
     def __init__(self, cfg, params, batch_size: int, max_len: int,
                  eos_id: Optional[int] = None, pad_id: int = 0,
                  default_sampling: SamplingParams = GREEDY, seed: int = 0,
                  prefill_chunk: Optional[int] = None,
-                 cache_dtype=jnp.bfloat16):
+                 cache_dtype=jnp.bfloat16, backend: str = "contiguous",
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 prefix_cache: bool = True):
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -127,20 +82,23 @@ class ServeEngine:
         self.pad_id = pad_id
         self.default_sampling = default_sampling
         self.seed = seed
-        self.pool = CachePool(cfg, batch_size, max_len, cache_dtype)
-        chunk = prefill_chunk or min(32, self.pool.min_ring_len)
-        assert chunk <= self.pool.min_ring_len, (
-            f"prefill_chunk {chunk} would wrap the smallest ring buffer "
-            f"({self.pool.min_ring_len}) inside one scatter"
+        if backend == "contiguous":
+            self.backend = ContiguousBackend(cfg, batch_size, max_len,
+                                             cache_dtype)
+        elif backend == "paged":
+            self.backend = PagedBackend(
+                cfg, batch_size, max_len, cache_dtype,
+                block_size=block_size, num_blocks=num_blocks,
+                prefix_cache=prefix_cache,
+            )
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        chunk = prefill_chunk or min(32, self.backend.max_chunk)
+        assert chunk <= self.backend.max_chunk, (
+            f"prefill_chunk {chunk} exceeds backend limit "
+            f"{self.backend.max_chunk}"
         )
         self.sched = Scheduler(chunk, max_len, eos_id)
-        # Donate the cache (and logits buffer) so XLA aliases them in
-        # place instead of materializing a second full pool every tick
-        # (no-op on CPU, which lacks donation — a one-time warning).
-        self._prefill_chunk = jax.jit(
-            make_prefill_chunk_step(cfg), donate_argnums=(1, 2)
-        )
-        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(3,))
         self._sample = jax.jit(sample_tokens)
         # Per-slot logits of the *last* model call that touched the row —
         # valid iff the row is in DECODE state.
@@ -152,6 +110,12 @@ class ServeEngine:
         self._seed = np.zeros((batch_size,), np.int32)
         self._step = np.zeros((batch_size,), np.int32)
         self.decode_steps = 0  # batched decode model calls (perf counter)
+        self.preemptions = 0
+        # Set by a preemption while other rows are live: admission pauses
+        # until one of them RETIRES. Without this barrier two equal-sized
+        # rows livelock — the preempted one instantly re-admits into its
+        # own freed blocks and starves the other into preempting, forever.
+        self._admission_hold = False
 
     # -- request intake ----------------------------------------------------
 
@@ -161,14 +125,22 @@ class ServeEngine:
                 f"prompt({len(req.prompt)}) + max_new({req.max_new_tokens}) "
                 f"exceeds max_len {self.max_len}"
             )
+        if not self.backend.accepts(len(req.prompt), req.max_new_tokens):
+            raise ValueError(
+                f"request needs more cache than the backend owns "
+                f"(prompt {len(req.prompt)} + max_new {req.max_new_tokens})"
+            )
         self.sched.submit(req)
 
     # -- tick phases -------------------------------------------------------
 
     def _admit(self):
-        while self.sched.has_queued() and self.pool.num_free:
-            slot = self.pool.acquire()
-            entry = self.sched.bind(slot)
+        while self.sched.has_queued() and not self._admission_hold:
+            res = self.backend.try_admit(self.sched.peek())
+            if res is None:
+                break  # FIFO: head blocks until memory frees
+            slot, cached_len = res
+            entry = self.sched.bind(slot, start_pos=cached_len)
             sp = entry.req.sampling
             if sp is GREEDY:
                 sp = self.default_sampling
@@ -184,12 +156,25 @@ class ServeEngine:
         if entry is None:
             return False
         toks, poss = entry.take_chunk()
-        self.pool.cache, self._logits = self._prefill_chunk(
-            self.params, self.pool.cache, self._logits,
-            jnp.int32(entry.slot),
-            jnp.asarray([toks], jnp.int32), jnp.asarray([poss], jnp.int32),
+        self._logits = self.backend.prefill_chunk(
+            self.params, self._logits, entry.slot, toks, poss
         )
+        if entry.prefill_done():
+            self.backend.prefill_finished(entry)
         return True
+
+    def _preempt(self, entry):
+        """Out of cache memory mid-decode: reclaim the row and put the
+        request back at the head of the queue for a full restart. Its
+        own prefix-cache hits are disabled on the retry so eviction can
+        always reclaim enough blocks to finish it."""
+        self.backend.retire(entry.slot)
+        self.sched.requeue(entry)
+        entry.req.no_prefix_cache = True
+        self.preemptions += 1
+        # Hold admission until a live row retires and genuinely frees
+        # memory; with no other live row the restart owns the whole pool.
+        self._admission_hold = bool(self.sched.live)
 
     def _do_decode(self) -> int:
         """Sample every DECODE row from the logits buffer, retire finished
@@ -211,15 +196,17 @@ class ServeEngine:
             self._step[e.slot] += 1
             emitted += 1
             if self.sched.record_token(e, tok):
-                self.pool.release(e.slot)
+                self.backend.retire(e.slot)
+                self._admission_hold = False  # memory actually freed
+            elif not self.backend.ensure_decode_block(e.slot, e.pos):
+                self._preempt(e)
             else:
                 in_toks[e.slot, 0] = tok
                 in_pos[e.slot] = e.pos
                 survivors.append(e)
         if survivors:
-            logits, self.pool.cache = self._decode(
-                self.params, jnp.asarray(in_toks), jnp.asarray(in_pos),
-                self.pool.cache,
+            logits = self.backend.decode(
+                self.params, jnp.asarray(in_toks), jnp.asarray(in_pos)
             )
             self._logits = logits[:, 0].astype(jnp.float32)
             self.decode_steps += 1
@@ -240,6 +227,17 @@ class ServeEngine:
         while self.sched.pending():
             self.step()
         return self.decode_steps
+
+    # -- introspection -----------------------------------------------------
+
+    def jit_cache_sizes(self) -> tuple:
+        """Compiled-signature counts of every serving program (backend
+        programs + the sampler) — frozen after warmup means zero
+        recompiles under churn."""
+        return self.backend.jit_cache_sizes() + (self._sample._cache_size(),)
+
+    def peak_cache_bytes(self) -> int:
+        return self.backend.peak_cache_bytes()
 
 
 # ---------------------------------------------------------------------------
@@ -277,6 +275,16 @@ class WaveEngine:
         self._sample = jax.jit(sample_tokens)
         self.queue: List[Request] = []
         self.decode_steps = 0
+
+    def peak_cache_bytes(self) -> int:
+        # abstract shapes only — don't materialize a pool to measure one
+        shapes = jax.eval_shape(
+            lambda: init_cache(self.cfg, self.batch, self.max_len)
+        )
+        return sum(
+            int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+            for leaf in jax.tree_util.tree_leaves(shapes)
+        )
 
     def submit(self, req: Request):
         req.t_submit = time.perf_counter()

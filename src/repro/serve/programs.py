@@ -1,0 +1,197 @@
+"""Jitted device programs the serving engines run.
+
+Each factory closes over a config and returns a pure function with ONE
+fixed signature — request churn changes values (slot ids, positions,
+block tables), never shapes, so each program compiles exactly once.
+
+Contiguous programs address the cache as (num_slots, max_len) rows
+(serve/cache_pool.py); paged programs address a (num_blocks, block_size)
+block pool through per-row block tables (serve/block_manager.py). The
+attention cache is per-layer "attn" entries; SSM recurrent state stays
+slot-indexed in both layouts (it is constant-size per row — there is
+nothing to page).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..layers.attention import copy_kv_blocks, reset_block_pos
+from ..layers.ssm import reset_ssm_rows
+from ..models import lm_apply
+from .cache_pool import pool_row, pool_write_row
+
+
+# ---------------------------------------------------------------------------
+# contiguous (slot-row) programs
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg, max_len: int):
+    """Whole-prompt prefill: (params, tokens(B,S), cache) ->
+    (logits(B,1,V), cache). Shared positions arange(S) — the wave path and
+    the dry-run's prefill cells."""
+
+    def prefill(params, tokens, cache):
+        s = tokens.shape[1]
+        logits, cache, _ = lm_apply(
+            params, cfg, tokens, positions=jnp.arange(s), cache=cache,
+            mode="prefill", last_only=True,
+        )
+        return logits, cache
+
+    return prefill
+
+
+def make_decode_step(cfg):
+    """(params, tokens(B,1), pos(B,), cache) -> (logits(B,1,V), cache).
+    Per-row positions; rows with pos<0 are inactive no-ops."""
+
+    def decode(params, tokens, pos, cache):
+        logits, cache, _ = lm_apply(
+            params, cfg, tokens, positions=pos[:, None], cache=cache,
+            mode="decode",
+        )
+        return logits, cache
+
+    return decode
+
+
+def make_prefill_chunk_step(cfg):
+    """Chunked prefill into one pool slot: (params, pool_cache, logits_buf,
+    slot, tokens(1,C), positions(1,C)) -> (pool_cache, logits_buf).
+
+    mode="decode" with S>1 makes attention read prior chunks back out of
+    the cache (and the SSM paths continue from their recurrent state), so
+    chunks compose exactly; left-pad tokens carry position -1 and touch
+    nothing."""
+
+    def prefill_chunk(params, cache, buf, slot, tokens, positions):
+        row = pool_row(cache, slot)
+        logits, row, _ = lm_apply(
+            params, cfg, tokens, positions=positions, cache=row,
+            mode="decode", last_only=True,
+        )
+        cache = pool_write_row(cache, slot, row)
+        buf = jax.lax.dynamic_update_slice_in_dim(
+            buf, logits[:, -1].astype(buf.dtype), slot, axis=0
+        )
+        return cache, buf
+
+    return prefill_chunk
+
+
+# ---------------------------------------------------------------------------
+# paged (block-pool) programs
+# ---------------------------------------------------------------------------
+
+
+def _ssm_row_view(cache, slot):
+    """Batch-1 view of one slot: attention block pools pass through whole
+    (they are row-independent — addressing goes through the table), SSM
+    leaves are sliced to the slot's row."""
+    view = []
+    for layer in cache:
+        c = {}
+        if "attn" in layer:
+            c["attn"] = layer["attn"]
+        if "ssm" in layer:
+            c["ssm"] = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0),
+                layer["ssm"],
+            )
+        view.append(c)
+    return view
+
+
+def _ssm_row_merge(cache, new_view, slot):
+    """Inverse of `_ssm_row_view`: adopt updated attention pools wholesale,
+    scatter the batch-1 SSM rows back into the slot."""
+    out = []
+    for layer, nl in zip(cache, new_view):
+        c = dict(layer)
+        if "attn" in c:
+            c["attn"] = nl["attn"]
+        if "ssm" in c:
+            c["ssm"] = jax.tree_util.tree_map(
+                lambda a, r: jax.lax.dynamic_update_slice_in_dim(
+                    a, r.astype(a.dtype), slot, axis=0
+                ),
+                layer["ssm"], nl["ssm"],
+            )
+        out.append(c)
+    return out
+
+
+def make_prefill_chunk_paged(cfg):
+    """Chunked prefill through a block table: (params, cache, logits_buf,
+    slot, table(1,nb), tokens(1,C), positions(1,C)) -> (cache, buf).
+    Attention writes scatter into the slot's table blocks; SSM state lives
+    in the slot row as in the contiguous path."""
+
+    def prefill_chunk(params, cache, buf, slot, table, tokens, positions):
+        view = _ssm_row_view(cache, slot)
+        logits, view, _ = lm_apply(
+            params, cfg, tokens, positions=positions, cache=view,
+            mode="decode", last_only=True, block_tables=table,
+        )
+        cache = _ssm_row_merge(cache, view, slot)
+        buf = jax.lax.dynamic_update_slice_in_dim(
+            buf, logits[:, -1].astype(buf.dtype), slot, axis=0
+        )
+        return cache, buf
+
+    return prefill_chunk
+
+
+def make_decode_step_paged(cfg):
+    """(params, tokens(B,1), pos(B,), tables(B,nb), cache) ->
+    (logits(B,1,V), cache). Rows with pos<0 are inactive; their (all-null)
+    table rows gather only masked-out keys."""
+
+    def decode(params, tokens, pos, tables, cache):
+        logits, cache, _ = lm_apply(
+            params, cfg, tokens, positions=pos[:, None], cache=cache,
+            mode="decode", block_tables=tables,
+        )
+        return logits, cache
+
+    return decode
+
+
+def clear_blocks_program(cache, blocks):
+    """Invalidate a (W,) padded batch of physical blocks across every
+    attention layer (pos -> -1) and return the cache. Freed blocks are
+    cleared lazily at their next allocation, exactly like contiguous slot
+    rows. Jit-safe."""
+    out = []
+    for layer in cache:
+        c = dict(layer)
+        if "attn" in c:
+            c["attn"] = reset_block_pos(c["attn"], blocks)
+        out.append(c)
+    return out
+
+
+def copy_blocks_program(cache, src, dst):
+    """Copy physical blocks src[i] -> dst[i] in every attention layer
+    (copy-on-write fork). Padded lanes carry out-of-range ids and drop."""
+    out = []
+    for layer in cache:
+        c = dict(layer)
+        if "attn" in c:
+            c["attn"] = copy_kv_blocks(c["attn"], src, dst)
+        out.append(c)
+    return out
+
+
+def clear_ssm_slot_program(cache, slot):
+    """Zero one slot's SSM rows (paged acquire — attention needs no clear
+    here because block invalidation happens per block at allocation)."""
+    out = []
+    for layer in cache:
+        c = dict(layer)
+        if "ssm" in c:
+            c["ssm"] = reset_ssm_rows(c["ssm"], slot)
+        out.append(c)
+    return out

@@ -45,6 +45,13 @@ class Request:
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    # Set after a preemption: the retry must not pin prefix-cache blocks,
+    # so eviction can always reclaim enough memory to finish it.
+    no_prefix_cache: bool = False
+    # Tokens already streamed via on_token before a preemption; the retry
+    # replays the identical seeded stream, so callbacks stay suppressed
+    # until generation passes this watermark (no duplicate streaming).
+    stream_resume: int = 0
 
 
 # Slot states
@@ -55,13 +62,19 @@ DECODE = "decode"
 
 @dataclass
 class SlotEntry:
-    """Scheduler-side state of one occupied cache-pool slot."""
+    """Scheduler-side state of one occupied cache-pool slot.
+
+    ``start_pos`` is the first prompt position prefill actually runs —
+    positions [0, start_pos) were served out of the paged backend's
+    prefix cache and already sit in this row's block table. Always 0 on
+    the contiguous backend."""
 
     slot: int
     req: Request
     chunk: int  # prefill chunk size the prompt was split into
     n_chunks: int
     left_pad: int  # invalid tokens prepended to the first chunk
+    start_pos: int = 0
     next_chunk: int = 0
     pos: int = 0  # absolute position the next input token writes
     n_generated: int = 0
@@ -78,8 +91,8 @@ class SlotEntry:
         p = self.req.prompt
         toks, poss = [], []
         for i in range(j * self.chunk, (j + 1) * self.chunk):
-            k = i - self.left_pad  # index into the real prompt
-            if k < 0:
+            k = self.start_pos + (i - self.left_pad)  # prompt index
+            if k < self.start_pos:
                 toks.append(0)
                 poss.append(-1)
             else:
@@ -111,23 +124,45 @@ class Scheduler:
     def has_queued(self) -> bool:
         return bool(self.queue)
 
+    def peek(self) -> Request:
+        """Oldest queued request (admission decisions inspect the prompt
+        before committing memory)."""
+        return self.queue[0]
+
     def pending(self) -> bool:
         return bool(self.queue or self.live)
 
-    def bind(self, slot: int) -> SlotEntry:
+    def bind(self, slot: int, start_pos: int = 0) -> SlotEntry:
         """Admit the oldest queued request into `slot` (caller acquired it
-        from the cache pool, i.e. the row is clean)."""
+        from the cache backend, i.e. the row/table is ready). With
+        ``start_pos`` > 0, prefill covers only prompt[start_pos:] — the
+        prefix-cache hit path."""
         req = self.queue.popleft()
         p = len(req.prompt)
         assert p >= 1, "empty prompt"
+        assert 0 <= start_pos < p, "must re-run at least the last token"
         c = self.prefill_chunk
-        n_chunks = -(-p // c)
+        tail = p - start_pos
+        n_chunks = -(-tail // c)
         entry = SlotEntry(
             slot=slot, req=req, chunk=c, n_chunks=n_chunks,
-            left_pad=n_chunks * c - p,
+            left_pad=n_chunks * c - tail, start_pos=start_pos,
         )
         self.live[slot] = entry
         return entry
+
+    def requeue(self, entry: SlotEntry):
+        """Preemption: put a live request back at the FRONT of the queue
+        with a full restart (its memory was reclaimed — generated tokens
+        are discarded and will be regenerated; per-request seeded sampling
+        replays the identical stream)."""
+        del self.live[entry.slot]
+        entry.state = FREE
+        req = entry.req
+        req.stream_resume = max(req.stream_resume, len(req.out))
+        req.out = []
+        req.done = False
+        self.queue.appendleft(req)
 
     # -- tick queries ------------------------------------------------------
 
@@ -149,11 +184,14 @@ class Scheduler:
         request retired (caller must release the slot to the pool)."""
         req = entry.req
         now = time.perf_counter()
-        if not req.out:
+        # t_first_token == 0.0 means never delivered: a preemption retry
+        # keeps the ORIGINAL first-token time (those tokens reached the
+        # caller; the replay is internal), so TTFT stays honest.
+        if not req.out and req.t_first_token == 0.0:
             req.t_first_token = now
         req.out.append(token)
         entry.n_generated += 1
-        if req.on_token is not None:
+        if req.on_token is not None and len(req.out) > req.stream_resume:
             req.on_token(req, token)
         hit_eos = self.eos_id is not None and token == self.eos_id
         out_of_budget = entry.n_generated >= req.max_new_tokens

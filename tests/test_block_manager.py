@@ -1,0 +1,126 @@
+"""BlockManager host-side invariants: alloc/free/refcount round trips,
+fork sharing, COW bookkeeping — plus device-level block clear/copy."""
+import jax.numpy as jnp
+import pytest
+
+from repro.serve.block_manager import BlockManager
+
+
+def test_alloc_free_roundtrip():
+    m = BlockManager(num_blocks=5)  # block 0 reserved null
+    assert m.num_free == 4
+    a = m.alloc(2)
+    assert len(a) == 2 and 0 not in a
+    assert m.num_free == 2 and m.num_used == 2
+    assert all(m.ref[b] == 1 for b in a)
+    for b in a:
+        assert m.decref(b)  # freed at zero
+    assert m.num_free == 4 and m.num_used == 0
+    # freed blocks come back (LIFO)
+    b = m.alloc(4)
+    assert sorted(b) == [1, 2, 3, 4]
+
+
+def test_alloc_overflow_guarded():
+    m = BlockManager(num_blocks=3)
+    m.alloc(2)
+    assert not m.can_alloc(1)
+    with pytest.raises(AssertionError):
+        m.alloc(1)
+
+
+def test_refcount_sharing():
+    m = BlockManager(num_blocks=4)
+    (b,) = m.alloc(1)
+    m.incref(b)  # second owner (e.g. radix node)
+    assert m.needs_cow(b)
+    assert not m.decref(b)  # still one owner
+    assert not m.needs_cow(b)
+    assert m.decref(b)  # now freed
+    assert m.num_free == 3
+
+
+def test_double_free_rejected():
+    m = BlockManager(num_blocks=3)
+    (b,) = m.alloc(1)
+    m.decref(b)
+    with pytest.raises(AssertionError):
+        m.decref(b)
+
+
+def test_null_block_pinned():
+    m = BlockManager(num_blocks=3)
+    with pytest.raises(AssertionError):
+        m.incref(0)
+    with pytest.raises(AssertionError):
+        m.decref(0)
+    # null never appears in allocations however hard we churn
+    for _ in range(3):
+        blocks = m.alloc(2)
+        assert 0 not in blocks
+        for b in blocks:
+            m.decref(b)
+
+
+def test_fork_table_cow_lifecycle():
+    """Fork shares every real block; a write to a shared block must COW
+    (needs_cow True), and after the copy both tables free independently."""
+    m = BlockManager(num_blocks=8)
+    table = m.alloc(3) + [0, 0]  # 3 real blocks, 2 null entries
+    clone = m.fork_table(table)
+    assert clone == table
+    assert all(m.needs_cow(b) for b in table if b != 0)
+    # COW on the clone's block 1: new private block, old loses one ref
+    old = clone[1]
+    (new,) = m.alloc(1)
+    m.decref(old)
+    clone[1] = new
+    assert not m.needs_cow(table[1])  # parent now sole owner again
+    # retire both tables: every block drains to the free list
+    for b in table + clone:
+        if b != 0:
+            m.decref(b)
+    assert m.num_used == 0
+
+
+def test_high_water_tracks_peak_not_current():
+    m = BlockManager(num_blocks=10)
+    a = m.alloc(5)
+    for b in a[:4]:
+        m.decref(b)
+    m.alloc(1)
+    assert m.num_used == 2
+    assert m.high_water == 5
+
+
+def test_device_clear_and_copy_blocks():
+    """The jitted block clear/copy programs: clear invalidates only the
+    targeted blocks' pos; copy moves KV content block-for-block (the COW
+    device op); padded out-of-range ids are dropped."""
+    from repro.configs import get_config, reduced
+    from repro.serve.block_manager import init_paged_cache
+    from repro.serve.programs import clear_blocks_program, copy_blocks_program
+
+    cfg = reduced(get_config("llama3-8b"))
+    cache = init_paged_cache(cfg, num_blocks=4, block_size=4, num_slots=2)
+    # paint every pos valid, every k distinct per block
+    painted = []
+    for layer in cache:
+        a = dict(layer["attn"])
+        a["pos"] = jnp.tile(jnp.arange(4)[:, None], (1, 4)) * 10
+        a["k"] = jnp.ones_like(a["k"]) * jnp.arange(4).reshape(4, 1, 1, 1)
+        painted.append({"attn": a})
+    cache = painted
+
+    cleared = clear_blocks_program(cache, jnp.asarray([2, 99, 99, 99]))
+    for layer in cleared:
+        pos = layer["attn"]["pos"]
+        assert (pos[2] == -1).all()  # cleared
+        assert (pos[1] == 10).all() and (pos[3] == 30).all()  # untouched
+
+    copied = copy_blocks_program(cache, jnp.asarray([3, 0, 0, 0]),
+                                 jnp.asarray([1, 99, 99, 99]))
+    for layer in copied:
+        assert (layer["attn"]["k"][1] == 3).all()  # 3 -> 1 copied
+        assert (layer["attn"]["pos"][1] == 30).all()
+        assert (layer["attn"]["k"][3] == 3).all()  # source intact

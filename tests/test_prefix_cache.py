@@ -1,0 +1,130 @@
+"""Radix prefix-cache invariants: insert/lookup round trips, the
+last-token cap, dedup, LRU leaf-first eviction under pressure, and the
+pin rule (blocks under live requests are unevictable)."""
+from repro.serve.block_manager import BlockManager
+from repro.serve.prefix_cache import RadixPrefixCache
+
+BS = 4
+
+
+def _prompt(*blocks):
+    out = []
+    for b in blocks:
+        out.extend([b * 100 + i for i in range(BS)])
+    return out
+
+
+def _insert_chain(tree, mgr, tokens):
+    n_full = len(tokens) // BS
+    blocks = mgr.alloc(n_full)
+    tree.insert(tokens[: n_full * BS], blocks, mgr)
+    return blocks
+
+
+def test_insert_then_match_roundtrip():
+    mgr = BlockManager(32)
+    tree = RadixPrefixCache(BS)
+    toks = _prompt(1, 2, 3)
+    blocks = _insert_chain(tree, mgr, toks)
+    assert all(mgr.ref[b] == 2 for b in blocks)  # request + tree
+    # same prompt + one extra token: full chain matches
+    assert tree.match(toks + [999]) == blocks
+    # shared two-block prefix, divergent third block
+    assert tree.match(_prompt(1, 2, 9) + [7]) == blocks[:2]
+    # cold prompt: nothing
+    assert tree.match(_prompt(8, 9) + [1]) == []
+
+
+def test_match_never_covers_last_token():
+    """At least one prompt token must re-run (the engine needs logits for
+    the final position), so a prompt that IS a cached chain matches only
+    its first blocks."""
+    mgr = BlockManager(32)
+    tree = RadixPrefixCache(BS)
+    toks = _prompt(1, 2)
+    blocks = _insert_chain(tree, mgr, toks)
+    assert tree.match(toks) == blocks[:1]  # last block excluded
+    assert tree.match(toks[: BS + 1]) == blocks[:1]
+    assert tree.match(toks[:BS]) == []  # whole prompt inside block 0
+
+
+def test_insert_dedups_keeps_incumbent():
+    mgr = BlockManager(32)
+    tree = RadixPrefixCache(BS)
+    toks = _prompt(1, 2)
+    first = _insert_chain(tree, mgr, toks)
+    dup = mgr.alloc(2)  # a second request prefilled the same prompt
+    adopted = tree.insert(toks, dup, mgr)
+    assert adopted == 0  # incumbents kept
+    assert tree.match(toks + [5]) == first
+    assert all(mgr.ref[b] == 1 for b in dup)  # dup stays request-owned
+
+
+def test_lru_eviction_leaf_first_under_pressure():
+    mgr = BlockManager(16)
+    tree = RadixPrefixCache(BS)
+    chain = _insert_chain(tree, mgr, _prompt(1, 2, 3))
+    other = _insert_chain(tree, mgr, _prompt(7))
+    # release the requests' own refs: tree is now sole owner of all
+    for b in chain + other:
+        mgr.decref(b)
+    # touch the deep chain so `other` is LRU
+    tree.match(_prompt(1, 2, 3) + [0])
+    assert tree.evict_one(mgr)
+    assert mgr.ref[other[0]] == 0  # LRU leaf went first
+    # chain evicts tail-first: 3, then 2, then 1
+    for expect in (chain[2], chain[1], chain[0]):
+        assert tree.evict_one(mgr)
+        assert mgr.ref[expect] == 0
+    assert not tree.evict_one(mgr)  # empty
+    assert len(tree) == 0
+    assert mgr.num_used == 0
+
+
+def test_pinned_blocks_unevictable():
+    """A chain matched by a live request (refcount >= 2) must survive any
+    amount of eviction pressure."""
+    mgr = BlockManager(16)
+    tree = RadixPrefixCache(BS)
+    chain = _insert_chain(tree, mgr, _prompt(1, 2))
+    for b in chain:
+        mgr.decref(b)  # tree sole owner
+    hit = tree.match(_prompt(1, 2) + [9])
+    for b in hit:
+        mgr.incref(b)  # live request pins the match
+    assert tree.evict_one(mgr) is False or mgr.ref[chain[0]] >= 2
+    # drain everything evictable; the pinned block must remain
+    tree.evict_all_unreferenced(mgr)
+    assert mgr.ref[chain[0]] >= 1
+    assert tree.match(_prompt(1, 9) + [0]) == chain[:1]  # still cached
+
+
+def test_eviction_under_allocation_pressure_frees_enough():
+    """The backend's loop: evict until alloc fits. 6 usable blocks, a
+    4-block cold tree, a 4-block allocation must succeed after evicting."""
+    mgr = BlockManager(7)
+    tree = RadixPrefixCache(BS)
+    chain = _insert_chain(tree, mgr, _prompt(1, 2, 3, 4))
+    for b in chain:
+        mgr.decref(b)
+    assert mgr.num_free == 2
+    while not mgr.can_alloc(4):
+        assert tree.evict_one(mgr)
+    got = mgr.alloc(4)
+    assert len(got) == 4
+
+
+def test_hit_stats_count_admissions_not_retries():
+    """match() itself is stat-free (a queue-blocked request re-matches
+    every admission attempt); record_lookup accounts the admitted
+    result."""
+    mgr = BlockManager(16)
+    tree = RadixPrefixCache(BS)
+    _insert_chain(tree, mgr, _prompt(1, 2))
+    got = tree.match(_prompt(1, 2) + [0])
+    got2 = tree.match(_prompt(1, 2) + [0])  # retry: no double count
+    assert tree.hits == 0 and tree.misses == 0
+    assert got == got2
+    tree.record_lookup(len(got))  # the attempt that admitted
+    tree.record_lookup(len(tree.match(_prompt(5) + [0])))
+    assert tree.hits == 2 and tree.misses == 1

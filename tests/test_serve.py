@@ -89,15 +89,14 @@ def test_chunked_prefill_matches_dense_forward():
 def test_no_decode_recompiles_under_churn():
     """The acceptance criterion: after a one-request warmup, the jit cache
     of every serving program stays FROZEN however rows churn (mixed prompt
-    lengths, budgets, early retirement, slot reuse). `_cache_size` counts
-    compiled signatures of the underlying function, so zero growth ==
+    lengths, budgets, early retirement, slot reuse). `jit_cache_sizes`
+    counts compiled signatures of every serving program, so zero growth ==
     zero recompiles."""
     cfg, eng = _engine(batch=2)
     warm = Request(prompt=[1, 2], max_new_tokens=2)
     eng.submit(warm)
     eng.run()
-    sizes = (eng._decode._cache_size(), eng._prefill_chunk._cache_size(),
-             eng._sample._cache_size())
+    sizes = eng.jit_cache_sizes()
     reqs = [
         Request(prompt=list(range(1, 2 + i)), max_new_tokens=2 + i % 5)
         for i in range(6)
@@ -106,8 +105,7 @@ def test_no_decode_recompiles_under_churn():
         eng.submit(r)
     eng.run()
     assert all(r.done for r in reqs)
-    after = (eng._decode._cache_size(), eng._prefill_chunk._cache_size(),
-             eng._sample._cache_size())
+    after = eng.jit_cache_sizes()
     assert after == sizes, f"serving programs recompiled: {sizes} -> {after}"
 
 
