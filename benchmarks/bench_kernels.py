@@ -151,6 +151,7 @@ def run():
                  + ("" if not fused else f" saving={ratio:.2f}x"))
 
     check_materialization()
+    check_paged_materialization()
 
 
 def check_materialization(verbose: bool = True):
@@ -186,6 +187,45 @@ def check_materialization(verbose: bool = True):
     if verbose:
         emit("kernel_softmoe_materialization", 0.0,
              f"fused=none jnp={len(ms)}_tensors")
+
+
+def check_paged_materialization(verbose: bool = True):
+    """Structural proof for the serving decode hot path: with the
+    paged-attention kernel on, the paged decode program's jaxpr carries
+    NO (B, blocks_per_row * block_size) tensor — `_paged_view`'s
+    per-step row-view gather is gone — while the jnp-gather oracle
+    materializes it. Same jaxpr-walk methodology as the Soft-MoE proof
+    above; the (B, view_len) pair stands in for (m, s).
+
+    Dims (b=3, blocks_per_row=7, block_size=16 -> view_len=112) are
+    chosen so neither 3 nor 112 collides with any reduced-llama3 model
+    axis (d_model 64, heads 4, head_dim 16, vocab 256).
+    """
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced
+    from repro.models import lm_init
+    from repro.serve.block_manager import init_paged_cache
+    from repro.serve.programs import make_decode_step_paged
+
+    cfg = reduced(get_config("llama3-8b"))
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    b, nb, bs = 3, 7, 16
+    view_len = nb * bs
+    cache = init_paged_cache(cfg, b * nb + 1, bs, b, dtype=jnp.bfloat16)
+    toks = jnp.zeros((b, 1), jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+    tables = jnp.zeros((b, nb), jnp.int32)
+    assert_no_ms_materialization(
+        make_decode_step_paged(cfg, use_kernel=True),
+        params, toks, pos, tables, cache, m=b, s=view_len)
+    ms = materialized_ms_shapes(
+        make_decode_step_paged(cfg, use_kernel=False),
+        params, toks, pos, tables, cache, m=b, s=view_len)
+    assert ms, "gather oracle should materialize the (B, L) row view"
+    if verbose:
+        emit("paged_decode_materialization", 0.0,
+             f"kernel=none gather={len(ms)}_tensors")
 
 
 if __name__ == "__main__":

@@ -1,14 +1,24 @@
-"""Serving benchmark: wave vs contiguous vs paged under a Poisson trace,
-plus a shared-system-prompt trace through the radix prefix cache.
+"""Serving benchmark: wave vs contiguous vs paged (Pallas kernel and
+jnp-gather decode) under a Poisson trace, plus a shared-system-prompt
+trace through the radix prefix cache and a paged-attention
+kernel-vs-gather decode phase.
 
 Replays one fixed trace of mixed-length requests (Poisson arrivals,
-uniform prompt lengths and token budgets) through all three engines and
+uniform prompt lengths and token budgets) through the engines and
 reports throughput (generated tokens / makespan), per-request latency
 (submit -> done) and TTFT (submit -> first token) percentiles, and peak
 cache memory (peak LIVE-request block footprint for the paged engine vs
-the fixed num_slots x max_len reservation). A second phase serves requests
-sharing one system prompt with the prefix cache cold vs warm and
-measures the TTFT reduction.
+the fixed num_slots x max_len reservation). A second phase serves
+requests sharing one system prompt with the prefix cache cold vs warm
+and measures the TTFT reduction. A third phase saturates the decode
+batch and compares the paged-attention kernel against the jnp row-view
+gather: token-for-token greedy parity (asserted), decode tok/s, and the
+modeled HBM bytes/step each path touches. On CPU the kernel runs in
+Pallas interpret mode, so its wall-clock is an emulation artifact (the
+PR 1 kernels' caveat applies verbatim) — the tok/s >= gather gate is
+enforced only when the kernel actually compiles to hardware; the
+traffic model and the parity/materialization proofs are backend-
+independent.
 
   PYTHONPATH=src python benchmarks/bench_serve.py            # full trace
   PYTHONPATH=src python benchmarks/bench_serve.py --smoke    # CI-sized
@@ -132,6 +142,91 @@ def summarize(label, makespan, reqs, decode_steps, peak_bytes):
     }
 
 
+def modeled_decode_hbm_bytes(cfg, batch, blocks_per_row, block_size,
+                             kernel: bool) -> int:
+    """Attention-cache HBM traffic per batched decode step (the quantity
+    the paged-attention kernel exists for). The kernel streams each pool
+    tile into VMEM once; the gather path touches the same bytes three
+    times — gather-read the pool, write the (B, L, ...) row view, read it
+    back in the attend. Weights/activations are identical either way and
+    excluded."""
+    a = cfg.attention
+    if a is None:
+        return 0
+    kv_bytes = 2  # bf16 pool
+    if a.kind == "mla":
+        per_tok = (a.kv_lora_rank + a.qk_rope_head_dim) * kv_bytes + 4
+    else:
+        per_tok = 2 * a.num_kv_heads * a.head_dim * kv_bytes + 4  # k+v+pos
+    stream = batch * blocks_per_row * block_size * per_tok
+    return cfg.num_layers * (stream if kernel else 3 * stream)
+
+
+def bench_paged_kernel(cfg, params, batch, max_len, block_size,
+                       budget: int):
+    """Paged-attention kernel vs jnp gather, decode-saturated: fill every
+    slot with a greedy request and drain. Token streams must be
+    IDENTICAL (asserted — the gather path is the kernel's oracle);
+    reports decode tok/s per path and the modeled HBM bytes/step.
+    Returns None on archs whose decode never takes the kernel (no
+    attention, or MLA's absorbed latent decode) — comparing two gather
+    engines there would report a fabricated saving."""
+    from repro.kernels.tuning import backend_is_tpu
+
+    if cfg.attention is None or cfg.attention.kind == "mla":
+        print("paged-kernel  n/a (GQA decode only: no attention / MLA "
+              "keeps the gather fallback)")
+        return None
+    streams, rates = {}, {}
+    for label, uk in (("gather", False), ("kernel", True)):
+        eng = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                          backend="paged", block_size=block_size,
+                          use_kernel=uk)
+        eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=2))
+        eng.run()  # compile warmup outside the timed window
+        reqs = [Request(prompt=[(i + 1) * 7 % 200 + 1] * 8,
+                        max_new_tokens=budget) for i in range(batch)]
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out) for r in reqs)
+        streams[label] = [r.out for r in reqs]
+        rates[label] = toks / dt
+    assert streams["kernel"] == streams["gather"], (
+        "paged-attention kernel diverged from the gather oracle"
+    )
+    blocks_per_row = -(-max_len // block_size)
+    hbm_k = modeled_decode_hbm_bytes(cfg, batch, blocks_per_row,
+                                     block_size, kernel=True)
+    hbm_g = modeled_decode_hbm_bytes(cfg, batch, blocks_per_row,
+                                     block_size, kernel=False)
+    emulated = not backend_is_tpu()
+    ratio = rates["kernel"] / max(rates["gather"], 1e-9)
+    note = " [interpret-mode emulation artifact]" if emulated else ""
+    print(f"paged-kernel  decode {rates['kernel']:7.1f} tok/s vs gather "
+          f"{rates['gather']:7.1f} tok/s ({ratio:.2f}x{note}) | modeled "
+          f"HBM {hbm_k/1e3:.1f}KB/step vs {hbm_g/1e3:.1f}KB "
+          f"({hbm_g/max(hbm_k,1):.1f}x less traffic) | greedy parity OK")
+    emit("serve_paged_kernel_decode_tok_s", 1e6 / max(rates["kernel"], 1e-9),
+         f"{rates['kernel']:.1f} tok/s")
+    emit("serve_paged_gather_decode_tok_s", 1e6 / max(rates["gather"], 1e-9),
+         f"{rates['gather']:.1f} tok/s")
+    emit("serve_paged_kernel_hbm_saving", hbm_g / max(hbm_k, 1) * 1e6,
+         "modeled gather/kernel bytes per decode step")
+    return {
+        "decode_tok_s_kernel": rates["kernel"],
+        "decode_tok_s_gather": rates["gather"],
+        "kernel_over_gather_tok_s": float(ratio),
+        "modeled_hbm_bytes_per_step_kernel": int(hbm_k),
+        "modeled_hbm_bytes_per_step_gather": int(hbm_g),
+        "modeled_hbm_traffic_saving": float(hbm_g / max(hbm_k, 1)),
+        "greedy_parity": True,
+        "emulated_interpret": emulated,
+    }
+
+
 def bench_prefix_cache(cfg, params, batch, max_len, n_warm: int):
     """Shared-system-prompt trace: one cold request populates the radix
     tree, `n_warm` same-prefix requests ride it. Requests run one at a
@@ -195,13 +290,17 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
         if kind == "contiguous":
             return ServeEngine(cfg, params, batch_size=batch,
                                max_len=max_len)
+        # "paged" decodes through the Pallas paged-attention kernel (the
+        # serving default); "paged_gather" is the jnp row-view oracle.
         return ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
                            backend="paged", block_size=block_size,
-                           num_blocks=num_blocks)
+                           num_blocks=num_blocks,
+                           use_kernel=kind == "paged")
 
     results = {}
     for kind, tick in (("wave", wave_tick), ("continuous", continuous_tick),
-                       ("paged", continuous_tick)):
+                       ("paged", continuous_tick),
+                       ("paged_gather", continuous_tick)):
         eng = build("contiguous" if kind == "continuous" else kind)
         # Warm THIS instance on a throwaway request: jax.jit caches are
         # per-closure, so compiles on a separate warm engine would be
@@ -210,7 +309,7 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
         eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=2))
         eng.run()
         eng.decode_steps = 0
-        if kind == "paged":
+        if kind.startswith("paged"):
             eng.backend.live_block_hw = 0
             eng.backend.mgr.high_water = eng.backend.mgr.num_used
             if eng.backend.prefix is not None:
@@ -218,7 +317,7 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
         mk, reqs = replay(eng, trace, tick)
         results[kind] = summarize(kind, mk, reqs, eng.decode_steps,
                                   eng.peak_cache_bytes())
-        if kind == "paged":
+        if kind.startswith("paged"):
             results[kind]["pool_high_water_blocks"] = (
                 eng.backend.mgr.high_water
             )
@@ -231,6 +330,10 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
 
     prefix = bench_prefix_cache(cfg, params, batch, max_len,
                                 n_warm=3 if smoke else 8)
+    paged_kernel = bench_paged_kernel(
+        cfg, params, batch, max_len, block_size,
+        budget=8 if smoke else max(16, max_len - 32),
+    )
 
     speedup = results["continuous"]["tok_s"] / max(
         results["wave"]["tok_s"], 1e-9
@@ -261,6 +364,7 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
         "smoke": smoke,
         "engines": results,
         "prefix_cache": prefix,
+        "paged_attention_kernel": paged_kernel,
         "continuous_over_wave_tok_s": float(speedup),
         "paged_over_contiguous_peak_cache": float(mem_ratio),
     }
@@ -277,6 +381,22 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
                 f"prefix cache TTFT reduction {prefix['ttft_reduction']:.2f}x "
                 "< 2x acceptance bar"
             )
+        # The tok/s bar applies where the kernel actually compiles to
+        # hardware; in interpret mode (CPU CI) wall-clock measures the
+        # Pallas emulator, not the kernel (see module docstring) — there
+        # the gates are greedy parity (asserted above) + the modeled
+        # traffic saving + the no-materialization proof (bench_kernels).
+        if (paged_kernel is not None
+                and not paged_kernel["emulated_interpret"]
+                and paged_kernel["kernel_over_gather_tok_s"] < 1.0):
+            raise SystemExit(
+                f"paged-attention kernel decode "
+                f"{paged_kernel['decode_tok_s_kernel']:.1f} tok/s < gather "
+                f"{paged_kernel['decode_tok_s_gather']:.1f} tok/s"
+            )
+        if (paged_kernel is not None
+                and paged_kernel["modeled_hbm_traffic_saving"] < 2.0):
+            raise SystemExit("kernel HBM model lost its 3x saving")
     return payload
 
 

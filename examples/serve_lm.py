@@ -48,6 +48,10 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens "
                          "to every request (exercises the radix cache)")
+    ap.add_argument("--no-kernel", dest="use_kernel", action="store_false",
+                    default=True,
+                    help="paged decode via the jnp row-view gather oracle "
+                         "instead of the Pallas paged-attention kernel")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -58,9 +62,11 @@ def main():
     if args.paged:
         kw = dict(backend="paged", block_size=args.block_size,
                   num_blocks=args.num_blocks,
-                  prefix_cache=args.prefix_cache)
+                  prefix_cache=args.prefix_cache,
+                  use_kernel=args.use_kernel)
         print(f"paged backend: block_size={args.block_size} "
-              f"prefix_cache={args.prefix_cache}")
+              f"prefix_cache={args.prefix_cache} "
+              f"decode={'kernel' if args.use_kernel else 'gather'}")
     eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=128, **kw)
 
     def stream(req, tok):

@@ -26,16 +26,11 @@ next step in EXPERIMENTS §Perf.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:  # jax >= 0.5 exports shard_map at top level
-    _shard_map = jax.shard_map
-except AttributeError:  # 0.4.x: experimental module only
-    from jax.experimental.shard_map import shard_map as _shard_map
+from .compat import axis_size, shard_map as _shard_map
 
 
 def _bucket_by_device(x, expert_idx, gate, num_devices: int,
@@ -74,10 +69,7 @@ def a2a_route_and_compute(x, router_w, expert_fn, *, axis_name: str,
     """Runs inside shard_map: x (t_local, d) token shard; router_w (d, E)
     replicated; expert_fn(local_expert_id, tokens) applies THIS device's
     expert. Returns (t_local, d) combined outputs."""
-    # jax.lax.axis_size only exists on newer jax; psum(1) is the portable
-    # spelling (constant-folded, no collective in the compiled program).
-    nd = (jax.lax.axis_size(axis_name) if hasattr(jax.lax, "axis_size")
-          else jax.lax.psum(1, axis_name))
+    nd = axis_size(axis_name)
     epd = num_experts // nd
     t, d = x.shape
     cap = max(int(capacity_factor * top_k * t / nd), 1)

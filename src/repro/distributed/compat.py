@@ -1,0 +1,41 @@
+"""jax version-compat shims shared across the repo (0.4.x <-> 0.5+).
+
+Three APIs drifted between the jax this container ships (0.4.37) and
+newer releases, and each one seeded a tier-1 test failure before it was
+shimmed. Every module that needs one imports it from here — the
+try/except must never be copy-pasted into call sites again (the seed had
+one inline copy in a2a_routing.py while optim/compression.py called
+``jax.shard_map`` bare and failed on 0.4.x).
+
+* ``shard_map`` — top-level export on jax >= 0.5, experimental module on
+  0.4.x.
+* ``axis_size`` — ``jax.lax.axis_size`` is new; ``psum(1, axis)`` is the
+  portable spelling (constant-folded, no collective in the compiled
+  program).
+* ``cost_analysis_dict`` — ``Compiled.cost_analysis()`` returns a dict
+  on newer jax but a list of per-module dicts on 0.4.x (and ``None`` on
+  some backends); this normalizes all three to a plain dict.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5 exports shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # 0.4.x: experimental module only
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def axis_size(axis_name: str):
+    """Size of a named mesh axis, inside shard_map/pmap-traced code."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict on every jax version."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}

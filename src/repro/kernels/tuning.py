@@ -43,6 +43,10 @@ class KernelConfig:
     block_slots: int = 128
     acc_dtype: str = "float32"  # accumulator / softmax-stat dtype
     interpret: Optional[bool] = None
+    # Paged decode-attention kernel: KV rows streamed per grid step.
+    # 0 = one whole pool block per step (``paged_config`` subdivides pool
+    # blocks larger than 128 rows so the VMEM tile stays bounded).
+    paged_block_kv: int = 0
 
     def resolve_interpret(self) -> bool:
         if self.interpret is not None:
@@ -93,6 +97,32 @@ def config_from_moe(moe_cfg, m: int, d: int,
     if bs:
         cfg = cfg.replace(block_slots=bs)
     return cfg
+
+
+def paged_config(block_size: int, base: Optional[KernelConfig] = None,
+                 interpret: Optional[bool] = None) -> KernelConfig:
+    """Tile policy for the paged decode-attention kernel
+    (kernels/paged_attention_kernels.py).
+
+    One grid step streams ``paged_block_kv`` KV rows of one physical pool
+    block into VMEM. Small pool blocks (the serving default, 16 tokens)
+    stream whole; blocks beyond 128 rows are subdivided into the LARGEST
+    divisor <= 128 (every block size has one — worst case 1) so the
+    resident tile stays inside the VMEM budget whatever ``--block-size``
+    the operator picks. The lazy ``interpret`` policy is inherited
+    unchanged — CPU CI runs the kernel interpreted per call, never via
+    an import-time global.
+    """
+    cfg = base or KernelConfig(interpret=interpret)
+    bkv = cfg.paged_block_kv
+    if not bkv:
+        bkv = block_size
+        if block_size > 128:
+            bkv = next(c for c in range(128, 0, -1) if block_size % c == 0)
+    assert block_size % bkv == 0, (
+        f"paged_block_kv {bkv} must divide pool block_size {block_size}"
+    )
+    return cfg.replace(paged_block_kv=bkv)
 
 
 def _round_up(x: int, mult: int) -> int:

@@ -14,6 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..kernels.paged_attention_kernels import paged_decode_attend
 from .common import lecun_init, split_rngs
 from .rotary import apply_rope
 
@@ -300,12 +301,16 @@ def reset_kv_rows(cache, row):
 
 def gqa_apply(params, cfg, x, *, layer_is_global: bool = True,
               positions=None, cache=None, mode: str = "train",
-              block_tables=None):
+              block_tables=None, paged_kernel: bool = False):
     """Returns (out, new_cache). positions: (S,) shared or (B,S) per-row
     absolute token positions; entries < 0 are pad/inactive (no cache write,
     masked from attention). With ``block_tables`` (B, blocks_per_row) the
     cache is a paged block pool (init_paged_kv_cache) addressed through the
-    tables instead of a per-row contiguous ring."""
+    tables instead of a per-row contiguous ring; ``paged_kernel`` routes
+    single-token paged decode through the Pallas kernel that streams pool
+    tiles in place (kernels/paged_attention_kernels.py) instead of
+    gathering the per-row view — chunked prefill (S > 1) and traced
+    ``layer_is_global`` flags keep the gather fallback."""
     a = cfg.attention
     b, s, _ = x.shape
     if positions is None:
@@ -327,12 +332,26 @@ def gqa_apply(params, cfg, x, *, layer_is_global: bool = True,
     if cache is None:
         k_all, v_all, kpos = k, v, positions
     elif block_tables is not None:
-        # Paged path: scatter this call's KV through the block tables,
-        # then gather the row views back (write-then-read keeps chunked
-        # prefill self-attending, exactly like the ring path below).
+        # Paged path: scatter this call's KV through the block tables
+        # (write-then-read keeps chunked prefill self-attending, exactly
+        # like the ring path below), then attend the pool — in place via
+        # the Pallas kernel on the decode hot path, or through the
+        # gathered row view (the bit-exact oracle / S>1 fallback).
         assert mode != "prefill", "paged cache serves chunked prefill only"
         cache = _paged_update(cache, {"k": k, "v": v}, positions,
                               block_tables)
+        if (paged_kernel and s == 1
+                and not isinstance(layer_is_global, jax.core.Tracer)):
+            qpos = (positions[:, 0] if positions.ndim == 2
+                    else jnp.broadcast_to(positions[0], (b,)))
+            out = paged_decode_attend(
+                q[:, 0], cache["k"], cache["v"], cache["pos"],
+                block_tables, qpos, causal=cfg.causal, window=window,
+                is_global=bool(layer_is_global),
+            )[:, None]
+            out = jnp.einsum("bshk,hkd->bsd", out,
+                             params["wo"].astype(x.dtype))
+            return out, cache
         gathered, kpos = _paged_view(cache, block_tables)
         k_all, v_all = gathered["k"], gathered["v"]
     else:
@@ -393,11 +412,17 @@ def mla_init(rng, cfg):
 
 def mla_apply(params, cfg, x, *, positions=None, cache=None,
               mode: str = "train", layer_is_global: bool = True,
-              block_tables=None):
+              block_tables=None, paged_kernel: bool = False):
     """MLA with compressed-KV cache. Decode uses the *absorbed* form:
     q_nope is projected into the latent rank space so attention scores are
     computed against the (B, S, rank) cache directly — no per-step
-    re-expansion of K (the production DeepSeek inference trick)."""
+    re-expansion of K (the production DeepSeek inference trick).
+
+    ``paged_kernel`` is accepted for signature parity but MLA keeps the
+    gather fallback: the absorbed decode attends a latent cache whose
+    score/value widths differ (rank + rope vs rank), and the latent-pool
+    kernel variant is a recorded follow-up (ROADMAP)."""
+    del paged_kernel
     a = cfg.attention
     b, s, _ = x.shape
     if positions is None:

@@ -68,12 +68,14 @@ def block_init(rng, cfg, is_moe: bool):
 
 def block_apply(params, cfg, x, *, is_moe: bool, is_global=True,
                 positions=None, cache=None, mode: str = "train",
-                use_kernel: bool = False, block_tables=None):
+                use_kernel: bool = False, block_tables=None,
+                paged_kernel: bool = False):
     """Returns (y, new_cache, aux). `is_global` may be a traced bool (scan
     over gemma3's 5-local:1-global pattern with shared weights).
     ``block_tables`` (B, blocks_per_row) switches attention caches to the
     paged block-pool layout (shared by every layer — all attention layers
-    write the same positions)."""
+    write the same positions); ``paged_kernel`` additionally routes paged
+    single-token decode through the Pallas paged-attention kernel."""
     aux = jnp.zeros((), jnp.float32)
     new_cache = {} if cache is not None else None
     xn = norm_apply(params["norm1"], cfg, x)
@@ -84,6 +86,7 @@ def block_apply(params, cfg, x, *, is_moe: bool, is_global=True,
             layer_is_global=is_global, positions=positions,
             cache=None if cache is None else cache.get("attn"),
             mode=mode, block_tables=block_tables,
+            paged_kernel=paged_kernel,
         )
         mix = mix + a_out
         if new_cache is not None:
@@ -183,7 +186,8 @@ def _scan_segment(seg_params, cfg, x, flags, is_moe, use_kernel, positions):
 
 
 def _unrolled_segment(seg_params, cfg, x, start, count, is_moe, caches,
-                      positions, mode, use_kernel, block_tables=None):
+                      positions, mode, use_kernel, block_tables=None,
+                      paged_kernel=False):
     """Python loop (serving path / scan_layers=False): heterogeneous caches."""
     aux = jnp.zeros((), jnp.float32)
     new_caches = []
@@ -199,6 +203,7 @@ def _unrolled_segment(seg_params, cfg, x, start, count, is_moe, caches,
             p, cfg, x, is_moe=is_moe, is_global=is_global,
             positions=positions, cache=cache_j, mode=mode,
             use_kernel=use_kernel, block_tables=block_tables,
+            paged_kernel=paged_kernel,
         )
         aux = aux + a
         new_caches.append(c)
@@ -207,13 +212,16 @@ def _unrolled_segment(seg_params, cfg, x, start, count, is_moe, caches,
 
 def lm_apply(params, cfg, tokens, *, embeds=None, positions=None,
              cache=None, mode: str = "train", use_kernel: bool = False,
-             last_only: bool = False, block_tables=None):
+             last_only: bool = False, block_tables=None,
+             paged_kernel: bool = False):
     """tokens: (B, S) int32; embeds: (B, N, E) frontend stub (vlm);
     positions: (S,) shared or (B, S) per-row (continuous-batching decode —
     entries < 0 mark pad/inactive tokens that neither write nor read any
     cache). ``block_tables`` (B, blocks_per_row) makes every attention
     cache a paged block pool (serve/block_manager.py) addressed through
-    the tables. Returns (logits, new_cache, aux). ``last_only`` unembeds
+    the tables; ``paged_kernel`` streams paged single-token decode through
+    the Pallas paged-attention kernel instead of gathering per-row KV
+    views. Returns (logits, new_cache, aux). ``last_only`` unembeds
     only the final position — prefill needs one next-token distribution,
     not S×vocab logits (at qwen2-72b:prefill_32k the full-logit tensor is
     32×32768×152064 f32 ≈ 638GB global)."""
@@ -242,7 +250,7 @@ def lm_apply(params, cfg, tokens, *, embeds=None, positions=None,
         for seg_params, (start, count, is_moe) in zip(params["segments"], segs):
             x, a, cs = _unrolled_segment(
                 seg_params, cfg, x, start, count, is_moe, cache,
-                positions, mode, use_kernel, block_tables,
+                positions, mode, use_kernel, block_tables, paged_kernel,
             )
             aux = aux + a
             new_cache.extend(cs)

@@ -20,6 +20,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..distributed.compat import shard_map
+
 
 def quantize_int8(x):
     """Symmetric per-tensor int8. Returns (q, scale)."""
@@ -72,7 +74,7 @@ def pod_allreduce_compressed(grads, err_state, mesh, specs):
     """
 
     @partial(
-        jax.shard_map, mesh=mesh, in_specs=(specs, specs),
+        shard_map, mesh=mesh, in_specs=(specs, specs),
         out_specs=(specs, specs),
     )
     def run(g, e):
@@ -91,7 +93,7 @@ def pod_allreduce_mean(grads, mesh, specs):
     """Exact (uncompressed) pod mean-reduce, same shard_map structure —
     the baseline the compression is measured against."""
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(specs,), out_specs=specs)
+    @partial(shard_map, mesh=mesh, in_specs=(specs,), out_specs=specs)
     def run(g):
         return jax.tree_util.tree_map(lambda x: jax.lax.pmean(x, "pod"), g)
 

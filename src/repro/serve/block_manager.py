@@ -145,7 +145,7 @@ class PagedBackend(CacheBackend):
     def __init__(self, cfg, num_slots: int, max_len: int,
                  dtype=jnp.bfloat16, block_size: int = 16,
                  num_blocks: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, use_kernel: bool = True):
         from .programs import (
             clear_blocks_program,
             clear_ssm_slot_program,
@@ -185,11 +185,17 @@ class PagedBackend(CacheBackend):
         # memory-proportionality claim is about.
         self.live_block_hw = 0
 
+        # Decode runs the Pallas paged-attention kernel by default (tiles
+        # streamed from the pool in place); use_kernel=False keeps the jnp
+        # row-view gather — the bit-exact oracle the kernel is tested
+        # against. Chunked prefill always takes the gather path (S > 1).
+        self.use_kernel = use_kernel
         self._prefill_chunk = jax.jit(
             make_prefill_chunk_paged(cfg), donate_argnums=(1, 2)
         )
         self._decode = jax.jit(
-            make_decode_step_paged(cfg), donate_argnums=(4,)
+            make_decode_step_paged(cfg, use_kernel=use_kernel),
+            donate_argnums=(4,),
         )
         self._clear_blocks = jax.jit(
             clear_blocks_program, donate_argnums=(0,)

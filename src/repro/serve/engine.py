@@ -65,7 +65,8 @@ class ServeEngine:
     backend="paged" extras: ``block_size`` tokens per KV block,
     ``num_blocks`` total pool blocks (default: capacity parity with the
     contiguous pool), ``prefix_cache`` to share common prompt prefixes
-    through the radix tree.
+    through the radix tree, ``use_kernel`` for the Pallas paged-attention
+    decode kernel (default on; off = the jnp row-view gather oracle).
     """
 
     def __init__(self, cfg, params, batch_size: int, max_len: int,
@@ -74,7 +75,7 @@ class ServeEngine:
                  prefill_chunk: Optional[int] = None,
                  cache_dtype=jnp.bfloat16, backend: str = "contiguous",
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, use_kernel: bool = True):
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -89,7 +90,7 @@ class ServeEngine:
             self.backend = PagedBackend(
                 cfg, batch_size, max_len, cache_dtype,
                 block_size=block_size, num_blocks=num_blocks,
-                prefix_cache=prefix_cache,
+                prefix_cache=prefix_cache, use_kernel=use_kernel,
             )
         else:
             raise ValueError(f"unknown backend {backend!r}")

@@ -27,9 +27,23 @@ Structure and invariants (tested in tests/test_prefix_cache.py):
 * Insertion dedups: if a node for the same token block already exists,
   the incumbent block is kept and the newcomer's duplicate is NOT
   adopted (it stays owned by its request alone and frees at retirement).
+
+Eviction cost: candidate leaves live in a lazy min-heap keyed by the
+logical clock, so ``evict_one`` is O(log n) amortized — it pops the true
+LRU leaf without rescanning the tree (the seed implementation walked
+every node per evicted block, O(tree) under memory pressure). The heap
+is *lazy*: touching a node (match / insert dedup) pushes a fresh entry
+rather than reordering, and stale entries — node evicted, no longer a
+leaf, or carrying an outdated clock — are discarded when popped. Pinned
+leaves (block refcount > 1: a live request or a fork also holds the
+block) are re-pushed after the scan, since the tree is not told when the
+BlockManager refcount drops back to 1; the pinned set is bounded by live
+requests, so the amortized bound stands. Invariant: every evictable leaf
+always has at least one heap entry carrying its current ``last_use``.
 """
 from __future__ import annotations
 
+import heapq
 from typing import Dict, List, Optional, Tuple
 
 
@@ -52,10 +66,44 @@ class RadixPrefixCache:
         self._clock = 0
         self.hits = 0  # blocks served from cache (stats for the bench)
         self.misses = 0  # lookups that matched nothing
+        # Lazy LRU heap of (last_use, seq, node) eviction candidates; seq
+        # breaks clock ties FIFO and keeps node comparison out of heapq.
+        self._lru: List[Tuple[int, int, _Node]] = []
+        self._seq = 0
+        self._n_nodes = 0  # live tree nodes (cheap len for compaction)
 
     def _tick(self) -> int:
         self._clock += 1
         return self._clock
+
+    def _push_lru(self, node: "_Node"):
+        """Register `node` as an eviction candidate at its current clock.
+        Call whenever a node is a leaf and its last_use just changed (or
+        it just became a leaf); earlier heap entries go stale and are
+        skipped at pop time. When stale entries dominate (a long run of
+        hits with no memory pressure pushes one per admission), the heap
+        is rebuilt from the live leaves — O(tree), amortized away by the
+        pushes that grew it."""
+        if node is self.root or node.children:
+            return
+        self._seq += 1
+        heapq.heappush(self._lru, (node.last_use, self._seq, node))
+        if len(self._lru) > max(64, 4 * self._n_nodes):
+            self._compact_lru()
+
+    def _compact_lru(self):
+        entries = []
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            for child in n.children.values():
+                if child.children:
+                    stack.append(child)
+                else:
+                    self._seq += 1
+                    entries.append((child.last_use, self._seq, child))
+        self._lru = entries
+        heapq.heapify(self._lru)
 
     def __len__(self) -> int:
         n = 0
@@ -89,6 +137,9 @@ class RadixPrefixCache:
             child.last_use = now
             out.append(child.block)
             node = child
+        # Only the deepest matched node can be a leaf (every other node on
+        # the path has the next node as a child); refresh its LRU entry.
+        self._push_lru(node)
         return out
 
     def record_lookup(self, n_blocks: int):
@@ -120,8 +171,13 @@ class RadixPrefixCache:
                 child = _Node(key, block, node)
                 node.children[key] = child
                 adopted += 1
+                self._n_nodes += 1
             child.last_use = now
             node = child
+        # The chain tail is the only possible leaf of this walk; nodes
+        # that just gained a child leave stale heap entries behind, which
+        # evict_one discards on pop.
+        self._push_lru(node)
         return adopted
 
     # -- eviction ----------------------------------------------------------
@@ -130,21 +186,38 @@ class RadixPrefixCache:
         """Drop the least-recently-used UNREFERENCED leaf (block refcount
         1 means only the tree holds it) and release its block. Returns
         False when nothing is evictable — every cached block is pinned by
-        a live request."""
+        a live request.
+
+        O(log n) amortized: pops the lazy LRU heap instead of rescanning
+        the tree. Stale entries (node evicted, grew children, or touched
+        since push) are discarded; pinned leaves are set aside and
+        re-pushed — refcounts change outside the tree's sight, so their
+        entries must survive until the pin drops."""
+        pinned: List[Tuple[int, int, _Node]] = []
         victim: Optional[_Node] = None
-        stack = [self.root]
-        while stack:
-            node = stack.pop()
-            for child in node.children.values():
-                if child.children:
-                    stack.append(child)
-                elif mgr.ref[child.block] == 1:
-                    if victim is None or child.last_use < victim.last_use:
-                        victim = child
+        while self._lru:
+            lu, seq, node = heapq.heappop(self._lru)
+            parent = node.parent
+            if (parent is None or parent.children.get(node.key) is not node
+                    or node.children or lu != node.last_use):
+                continue  # stale — a fresher entry (or none) supersedes it
+            if mgr.ref[node.block] != 1:
+                pinned.append((lu, seq, node))
+                continue
+            victim = node
+            break
+        for entry in pinned:
+            heapq.heappush(self._lru, entry)
         if victim is None:
             return False
-        del victim.parent.children[victim.key]
+        parent = victim.parent
+        del parent.children[victim.key]
+        victim.parent = None  # mark detached for any remaining heap entry
+        self._n_nodes -= 1
         mgr.decref(victim.block)
+        if not parent.children:
+            # chain tail removed: the parent is the next LRU candidate
+            self._push_lru(parent)
         return True
 
     def evict_all_unreferenced(self, mgr) -> int:

@@ -144,15 +144,22 @@ def make_prefill_chunk_paged(cfg):
     return prefill_chunk
 
 
-def make_decode_step_paged(cfg):
+def make_decode_step_paged(cfg, use_kernel: bool = False):
     """(params, tokens(B,1), pos(B,), tables(B,nb), cache) ->
     (logits(B,1,V), cache). Rows with pos<0 are inactive; their (all-null)
-    table rows gather only masked-out keys."""
+    table rows contribute only masked-out keys.
+
+    ``use_kernel`` routes GQA attention through the Pallas
+    paged-attention kernel (kernels/paged_attention_kernels.py), which
+    streams pool tiles in place — no per-step (B, blocks_per_row *
+    block_size, ...) row-view gather in the decode jaxpr (proved by
+    ``benchmarks.bench_kernels.check_paged_materialization``). The
+    default jnp gather path is the bit-exact oracle."""
 
     def decode(params, tokens, pos, tables, cache):
         logits, cache, _ = lm_apply(
             params, cfg, tokens, positions=pos[:, None], cache=cache,
-            mode="decode", block_tables=tables,
+            mode="decode", block_tables=tables, paged_kernel=use_kernel,
         )
         return logits, cache
 

@@ -114,6 +114,59 @@ def test_eviction_under_allocation_pressure_frees_enough():
     assert len(got) == 4
 
 
+def test_eviction_order_is_lru_over_many_chains():
+    """Regression for the O(log n) lazy-heap eviction (was an O(tree)
+    rescan per evicted block): with many chains touched in a scrambled
+    order, evict_one must free blocks in exact last-touch order,
+    skip pinned leaves, and come back to them once the pin drops."""
+    mgr = BlockManager(64)
+    tree = RadixPrefixCache(BS)
+    chains = {i: _insert_chain(tree, mgr, _prompt(10 + i))[0]
+              for i in range(8)}
+    for b in chains.values():
+        mgr.decref(b)  # tree sole owner
+    order = [3, 5, 0, 7, 2, 6, 1, 4]  # touch order = expected evict order
+    for i in order:
+        tree.match(_prompt(10 + i) + [0])
+    for i in (3, 5):  # pin the two LRU-most: eviction must skip them
+        mgr.incref(chains[i])
+
+    def evicted_chain():
+        (i,) = [i for i, b in chains.items() if mgr.ref[b] == 0]
+        del chains[i]
+        return i
+
+    freed = []
+    for _ in range(6):
+        assert tree.evict_one(mgr)
+        freed.append(evicted_chain())
+    assert freed == [0, 7, 2, 6, 1, 4], freed
+    assert not tree.evict_one(mgr)  # only pinned leaves remain
+    for i in (3, 5):
+        mgr.decref(chains[i])  # unpin: candidates must resurface
+    for expect in (3, 5):
+        assert tree.evict_one(mgr)
+        assert evicted_chain() == expect
+    assert len(tree) == 0 and mgr.num_used == 0
+
+
+def test_eviction_respects_dedup_touch_recency():
+    """A dedup re-insert refreshes a chain's recency exactly like a
+    match, so the untouched chain evicts first."""
+    mgr = BlockManager(16)
+    tree = RadixPrefixCache(BS)
+    a = _insert_chain(tree, mgr, _prompt(1))
+    b = _insert_chain(tree, mgr, _prompt(2))
+    for blk in a + b:
+        mgr.decref(blk)
+    dup = mgr.alloc(1)  # second prefill of prompt 1: dedup touch
+    tree.insert(_prompt(1), dup, mgr)
+    mgr.decref(dup[0])
+    assert tree.evict_one(mgr)
+    assert mgr.ref[b[0]] == 0, "untouched chain should be LRU"
+    assert mgr.ref[a[0]] == 1
+
+
 def test_hit_stats_count_admissions_not_retries():
     """match() itself is stat-free (a queue-blocked request re-matches
     every admission attempt); record_lookup accounts the admitted
