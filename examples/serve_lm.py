@@ -3,6 +3,8 @@
   PYTHONPATH=src python examples/serve_lm.py --arch qwen2-0.5b --requests 6
   PYTHONPATH=src python examples/serve_lm.py --paged --block-size 16 \
       --shared-prefix 32          # paged backend + radix prefix cache
+  PYTHONPATH=src python examples/serve_lm.py --paged --spec-k 4 \
+      --max-new 32                # n-gram speculative decoding
 
 Uses the reduced config (random weights — this demonstrates the serving
 machinery): requests with mixed prompt lengths, token budgets, and
@@ -20,7 +22,7 @@ import jax
 
 from repro.configs import get_config, reduced
 from repro.models import lm_init
-from repro.serve import Request, SamplingParams, ServeEngine
+from repro.serve import Request, SamplingParams, ServeEngine, SpecConfig
 
 
 def main():
@@ -52,6 +54,12 @@ def main():
                     default=True,
                     help="paged decode via the jnp row-view gather oracle "
                          "instead of the Pallas paged-attention kernel")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft k tokens per verify "
+                         "step via n-gram prompt lookup (0 = off)")
+    ap.add_argument("--cache-generated", action="store_true",
+                    help="also publish retired requests' generated tokens "
+                         "into the radix prefix cache (paged backend)")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -63,10 +71,15 @@ def main():
         kw = dict(backend="paged", block_size=args.block_size,
                   num_blocks=args.num_blocks,
                   prefix_cache=args.prefix_cache,
-                  use_kernel=args.use_kernel)
+                  use_kernel=args.use_kernel,
+                  cache_generated=args.cache_generated)
         print(f"paged backend: block_size={args.block_size} "
               f"prefix_cache={args.prefix_cache} "
+              f"cache_generated={args.cache_generated} "
               f"decode={'kernel' if args.use_kernel else 'gather'}")
+    if args.spec_k > 0:
+        kw["spec"] = SpecConfig(k=args.spec_k)
+        print(f"speculative decoding: k={args.spec_k} (n-gram self-draft)")
     eng = ServeEngine(cfg, params, batch_size=args.batch, max_len=128, **kw)
 
     def stream(req, tok):
@@ -100,10 +113,20 @@ def main():
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.out) for r in reqs)
     for i, r in enumerate(reqs):
-        print(f"req {i}: prompt[{len(r.prompt)}] -> {r.out}")
-    print(f"{args.requests} requests, {steps} decode steps, "
+        # finish_reason: "cache_ceiling" marks a TRUNCATED response (the
+        # request hit max_len), distinct from a normal eos/length stop.
+        print(f"req {i}: prompt[{len(r.prompt)}] -> {r.out} "
+              f"[{r.finish_reason}]")
+    truncated = sum(r.finish_reason == "cache_ceiling" for r in reqs)
+    print(f"{args.requests} requests ({truncated} truncated at the cache "
+          f"ceiling), {steps} decode steps, "
           f"{total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s on CPU)")
+    stats = eng.spec_stats()
+    if stats is not None:
+        print(f"spec decode: acceptance {stats['acceptance_rate']:.2f} "
+              f"({stats['accepted']}/{stats['drafted']} drafts), "
+              f"{stats['calls_per_token']:.2f} batched model calls/token")
     if args.paged:
         print(f"peak cache {eng.peak_cache_bytes()/1e6:.2f}MB "
               f"(live high-water {eng.backend.live_block_hw} blocks; "

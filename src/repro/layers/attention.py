@@ -200,42 +200,26 @@ def make_mask(q_positions, k_positions, causal: bool,
     return m
 
 
-def _ring_update(cache, new_vals: dict, positions):
-    """Write `new_vals[name]` (B,S,...) at per-row ring slots pos % length.
-
-    positions: (S,) shared or (B,S) per row. Tokens with position < 0 are
-    NO-OPS — the old cache entry survives. The serving engine relies on
-    this twice: (a) inactive/prefilling rows ride through batched decode
-    steps with position -1 without corrupting their cache, (b) left-pad
-    tokens of a chunked-prefill chunk write nothing."""
+def _ring_slots(cache, positions):
+    """Per-row ring addressing shared by every contiguous-cache writer:
+    (B?,S) absolute positions -> ((B,S) positions, (B,S) slots). Tokens
+    with position < 0 scatter to the out-of-bounds slot `length`, which
+    mode="drop" discards — a predicated write with no gather/select."""
     b, length = cache["pos"].shape
     if positions.ndim == 1:
         positions = jnp.broadcast_to(positions[None], (b, positions.shape[0]))
-    # Invalid tokens scatter to the out-of-bounds slot `length`, which
-    # mode="drop" discards — a predicated write with no gather/select.
     slots = jnp.where(positions >= 0, positions % length, length)  # (B,S)
-    bidx = jnp.arange(b)[:, None]
-    out = dict(cache)
-    for name, val in new_vals.items():
-        out[name] = cache[name].at[bidx, slots].set(
-            val.astype(cache[name].dtype), mode="drop"
-        )
-    out["pos"] = cache["pos"].at[bidx, slots].set(positions, mode="drop")
-    return out
+    return positions, slots
 
 
-def _paged_update(cache, new_vals: dict, positions, tables):
-    """Scatter `new_vals[name]` (B,S,...) into the paged pool through the
-    per-row block tables.
-
-    cache leaves: (num_blocks, block_size, ...); tables: (B, blocks_per_row)
-    physical block ids (0 = null); positions: (S,) shared or (B,S) per row.
-    Token at position p of row b lands in physical block
-    ``tables[b, p // block_size]`` at offset ``p % block_size``. Tokens with
-    position < 0 — and positions whose table entry is still the null
-    block — scatter to the out-of-bounds block `num_blocks`, which
-    mode="drop" discards: the same predicated-write trick `_ring_update`
-    uses, so inactive rows and left-pad tokens stay exact no-ops."""
+def _paged_address(cache, positions, tables):
+    """Block-table addressing shared by every paged-cache writer:
+    (B?,S) absolute positions -> ((B,S) positions, (B,S) physical block,
+    (B,S) offset). Token at position p of row b lands in physical block
+    ``tables[b, p // block_size]`` at offset ``p % block_size``. Tokens
+    with position < 0 — and positions whose table entry is still the
+    null block — address the out-of-bounds block `num_blocks`, which
+    mode="drop" discards (the paged analogue of `_ring_slots`)."""
     nb_total, bs_blk = cache["pos"].shape
     b = tables.shape[0]
     if positions.ndim == 1:
@@ -248,6 +232,33 @@ def _paged_update(cache, new_vals: dict, positions, tables):
     ok = (positions >= 0) & (phys > 0)
     phys = jnp.where(ok, phys, nb_total)  # OOB -> dropped
     off = jnp.where(ok, positions % bs_blk, 0)
+    return positions, phys, off
+
+
+def _ring_update(cache, new_vals: dict, positions):
+    """Write `new_vals[name]` (B,S,...) at per-row ring slots pos % length.
+
+    positions: (S,) shared or (B,S) per row. Tokens with position < 0 are
+    NO-OPS — the old cache entry survives. The serving engine relies on
+    this twice: (a) inactive/prefilling rows ride through batched decode
+    steps with position -1 without corrupting their cache, (b) left-pad
+    tokens of a chunked-prefill chunk write nothing."""
+    positions, slots = _ring_slots(cache, positions)
+    bidx = jnp.arange(slots.shape[0])[:, None]
+    out = dict(cache)
+    for name, val in new_vals.items():
+        out[name] = cache[name].at[bidx, slots].set(
+            val.astype(cache[name].dtype), mode="drop"
+        )
+    out["pos"] = cache["pos"].at[bidx, slots].set(positions, mode="drop")
+    return out
+
+
+def _paged_update(cache, new_vals: dict, positions, tables):
+    """Scatter `new_vals[name]` (B,S,...) into the paged pool through the
+    per-row block tables (`_paged_address` has the addressing rules;
+    inactive rows and left-pad tokens stay exact no-ops)."""
+    positions, phys, off = _paged_address(cache, positions, tables)
     out = dict(cache)
     for name, val in new_vals.items():
         out[name] = cache[name].at[phys, off].set(
@@ -289,6 +300,32 @@ def copy_kv_blocks(cache, src, dst):
     for name, val in cache.items():
         out[name] = val.at[dst].set(val[src], mode="drop")
     return out
+
+
+def invalidate_kv_positions(cache, positions):
+    """Speculative-decoding rollback for the contiguous ring: pos -> -1 at
+    each row's ring slot for `positions` (B, W) absolute positions; lanes
+    carrying -1 are no-ops. Rejected draft tokens' K/V entries were
+    already unreachable (their positions exceed every future query until
+    the row's write frontier overwrites them — causal masking), but
+    invalidating them makes the cache state *equal* to never having
+    drafted, which the rollback invariant tests check literally. Jit-safe
+    fixed-width batch (one compiled signature per verify shape)."""
+    _, slots = _ring_slots(cache, positions)
+    bidx = jnp.arange(slots.shape[0])[:, None]
+    return dict(
+        cache, pos=cache["pos"].at[bidx, slots].set(-1, mode="drop")
+    )
+
+
+def invalidate_paged_positions(cache, positions, tables):
+    """Paged analogue of `invalidate_kv_positions`: pos -> -1 through the
+    block tables for `positions` (B, W); -1 lanes and null-block entries
+    drop. Blocks that only held rejected tokens are separately un-reserved
+    by BlockManager rollback — this clears rejected entries inside blocks
+    the row keeps (the ones sharing a block with accepted tokens)."""
+    _, phys, off = _paged_address(cache, positions, tables)
+    return dict(cache, pos=cache["pos"].at[phys, off].set(-1, mode="drop"))
 
 
 def reset_kv_rows(cache, row):
@@ -336,7 +373,12 @@ def gqa_apply(params, cfg, x, *, layer_is_global: bool = True,
         # (write-then-read keeps chunked prefill self-attending, exactly
         # like the ring path below), then attend the pool — in place via
         # the Pallas kernel on the decode hot path, or through the
-        # gathered row view (the bit-exact oracle / S>1 fallback).
+        # gathered row view (the bit-exact oracle / S>1 fallback). The
+        # speculative-decoding verify step (serve/spec_decode.py) is an
+        # S = k+1 decode continuation and deliberately takes the gather
+        # route: every lane needs its own causal slice of the pool, which
+        # is exactly the chunked-prefill contract (a multi-query kernel
+        # variant is a recorded follow-up).
         assert mode != "prefill", "paged cache serves chunked prefill only"
         cache = _paged_update(cache, {"k": k, "v": v}, positions,
                               block_tables)

@@ -6,7 +6,10 @@ Layering (docs/serving.md has the full design):
   prefix_cache  — radix tree mapping token prefixes to shared block chains
   programs      — the jitted device programs (contiguous + paged)
   sampling      — batched per-request sampler suite (greedy/temp/top-k/top-p)
+                  + the speculative accept/resample step
   scheduler     — host-side admission queue + slot state machine
+  spec_decode   — speculative decoding: n-gram self-drafting + (B, k+1)
+                  verify + rejection-sampling accept with exact rollback
   engine        — ServeEngine (continuous) / WaveEngine (lockstep baseline)
 """
 from .block_manager import (  # noqa: F401
@@ -40,6 +43,13 @@ from .sampling import (  # noqa: F401
     sample_greedy,
     sample_temperature,
     sample_tokens,
+    spec_accept_tokens,
     stack_params,
 )
 from .scheduler import Request, Scheduler, SlotEntry  # noqa: F401
+from .spec_decode import (  # noqa: F401
+    Drafter,
+    NgramDrafter,
+    SpecConfig,
+    SpecDecoder,
+)

@@ -145,13 +145,16 @@ class PagedBackend(CacheBackend):
     def __init__(self, cfg, num_slots: int, max_len: int,
                  dtype=jnp.bfloat16, block_size: int = 16,
                  num_blocks: Optional[int] = None,
-                 prefix_cache: bool = True, use_kernel: bool = True):
+                 prefix_cache: bool = True, use_kernel: bool = True,
+                 cache_generated: bool = False):
         from .programs import (
             clear_blocks_program,
             clear_ssm_slot_program,
             copy_blocks_program,
+            invalidate_positions_paged_program,
             make_decode_step_paged,
             make_prefill_chunk_paged,
+            make_verify_step_paged,
         )
 
         self.cfg = cfg
@@ -175,6 +178,13 @@ class PagedBackend(CacheBackend):
             RadixPrefixCache(block_size)
             if prefix_cache and not cfg.has_ssm() else None
         )
+        # cache_finished() publishes a retired request's prompt+OUTPUT
+        # block chain into the radix tree, so a follow-up request whose
+        # prompt extends a completed conversation gets prefix hits past
+        # the original prompt boundary (multi-turn reuse). Opt-in: the
+        # tree then retains generation blocks until LRU eviction, which
+        # trades pool headroom for hits.
+        self.cache_generated = cache_generated and self.prefix is not None
         self.tables = np.zeros((num_slots, self.blocks_per_row), np.int32)
         self._tables_dev = None  # rebuilt lazily when tables change
         self._free_slots: List[int] = list(range(num_slots - 1, -1, -1))
@@ -196,6 +206,14 @@ class PagedBackend(CacheBackend):
         self._decode = jax.jit(
             make_decode_step_paged(cfg, use_kernel=use_kernel),
             donate_argnums=(4,),
+        )
+        # Speculative-decoding programs (compiled lazily at first use).
+        self._verify = jax.jit(
+            make_verify_step_paged(cfg, use_kernel=use_kernel),
+            donate_argnums=(4,),
+        )
+        self._invalidate = jax.jit(
+            invalidate_positions_paged_program, donate_argnums=(0,)
         )
         self._clear_blocks = jax.jit(
             clear_blocks_program, donate_argnums=(0,)
@@ -284,7 +302,44 @@ class PagedBackend(CacheBackend):
         """Make position `pos` writable for `slot`: allocate the logical
         block if the table has none (evicting prefix LRU under pressure),
         copy-on-write if it is shared. False = out of memory (preempt)."""
-        lb = pos // self.block_size
+        return self._ensure_logical_block(slot, pos // self.block_size)
+
+    def reserve_burst(self, slot: int, start: int, n: int) -> int:
+        """Make positions [start, start+n) writable for a speculative
+        burst: secure (alloc/COW) every logical block in range, in order,
+        evicting prefix LRU under pressure. Returns the number of leading
+        positions covered — a partial reservation shrinks the burst
+        rather than failing it, and 0 means even the pending token's
+        position could not be secured (the engine preempts)."""
+        bs = self.block_size
+        end = min(start + n, self.max_len)
+        covered = 0
+        for lb in range(start // bs, -(-end // bs)):
+            if not self._ensure_logical_block(slot, lb):
+                break
+            covered = min(end, (lb + 1) * bs) - start
+        return max(0, min(covered, n))
+
+    def rollback_burst(self, slot: int, next_pos: int):
+        """Un-reserve blocks that exist only to hold rejected draft
+        positions beyond ``next_pos`` (the row's next write position).
+        Afterwards the table and refcounts are exactly the
+        never-having-drafted state: blocks cover positions <= next_pos,
+        the same footprint `ensure_decode_block(slot, next_pos)` leaves
+        on the non-speculative path."""
+        row = self.tables[slot]
+        changed = False
+        for lb in range(next_pos // self.block_size + 1,
+                        self.blocks_per_row):
+            blk = int(row[lb])
+            if blk != 0:
+                self.mgr.decref(blk)
+                row[lb] = 0
+                changed = True
+        if changed:
+            self._tables_dev = None
+
+    def _ensure_logical_block(self, slot: int, lb: int) -> bool:
         blk = int(self.tables[slot, lb])
         if blk == 0:
             if not self._reserve(1):
@@ -313,6 +368,41 @@ class PagedBackend(CacheBackend):
         )
         return logits
 
+    def verify(self, params, toks, poss):
+        if self._tables_dev is None:
+            self._tables_dev = jnp.asarray(self.tables)
+        logits, self.cache = self._verify(
+            params, toks, poss, self._tables_dev, self.cache
+        )
+        return logits
+
+    def invalidate_positions(self, positions):
+        if self._tables_dev is None:
+            self._tables_dev = jnp.asarray(self.tables)
+        self.cache = self._invalidate(
+            self.cache, positions, self._tables_dev
+        )
+
+    def cache_finished(self, entry):
+        """Publish the retiring request's prompt+output chain into the
+        radix tree (``cache_generated``): a repeat or multi-turn
+        continuation then gets prefix hits past the original prompt
+        boundary. Only full blocks are insertable, and the last emitted
+        token is excluded — it was sampled but never fed, so its KV slot
+        is unwritten (on every path: EOS, budget, ceiling, speculative
+        truncation)."""
+        if not self.cache_generated or entry.req.no_prefix_cache:
+            return
+        toks = list(entry.req.prompt) + list(entry.req.out[:-1])
+        n_full = len(toks) // self.block_size
+        if n_full == 0:
+            return
+        row = self.tables[entry.slot]
+        self.prefix.insert(
+            toks[: n_full * self.block_size],
+            [int(b) for b in row[:n_full]], self.mgr,
+        )
+
     def retire(self, slot: int):
         row = self.tables[slot]
         for b in row:
@@ -327,7 +417,9 @@ class PagedBackend(CacheBackend):
         sizes = (self._decode._cache_size(),
                  self._prefill_chunk._cache_size(),
                  self._clear_blocks._cache_size(),
-                 self._copy_blocks._cache_size())
+                 self._copy_blocks._cache_size(),
+                 self._verify._cache_size(),
+                 self._invalidate._cache_size())
         if self._clear_ssm is not None:
             sizes += (self._clear_ssm._cache_size(),)
         return sizes

@@ -157,6 +157,38 @@ class CacheBackend:
         """One batched decode step over all slots; returns logits."""
         raise NotImplementedError
 
+    # -- speculative decoding (serve/spec_decode.py) -----------------------
+
+    def verify(self, params, toks, poss):
+        """One batched multi-token verify step: toks/poss are (B, k+1)
+        with lane 0 = each row's pending token; returns (B, k+1, V)
+        logits. Lanes with position -1 are exact no-ops."""
+        raise NotImplementedError
+
+    def reserve_burst(self, slot: int, start: int, n: int) -> int:
+        """Make positions [start, start+n) of `slot` writable for a
+        speculative burst; returns how many leading positions are covered
+        (0 = out of memory even for the pending token — preempt). The
+        contiguous pool reserves max_len rows up front, so every
+        in-range position is always writable."""
+        return n
+
+    def rollback_burst(self, slot: int, next_pos: int):
+        """Undo burst-only reservations after acceptance: release memory
+        that exists purely to hold positions > `next_pos` (the row's next
+        write position). No-op on the contiguous pool."""
+
+    def invalidate_positions(self, positions):
+        """pos -> -1 for a (B, k+1) batch of absolute positions (-1 lanes
+        drop): scrubs rejected draft lanes so the cache state equals
+        never having drafted."""
+        raise NotImplementedError
+
+    def cache_finished(self, entry):
+        """Hook fired at normal retirement (not preemption), before the
+        slot is released — the paged backend publishes generated-token
+        blocks into the radix tree here when ``cache_generated`` is on."""
+
     def retire(self, slot: int):
         """Release every resource `slot` holds."""
         raise NotImplementedError
@@ -177,7 +209,12 @@ class ContiguousBackend(CacheBackend):
 
     def __init__(self, cfg, num_slots: int, max_len: int,
                  dtype=jnp.bfloat16):
-        from .programs import make_decode_step, make_prefill_chunk_step
+        from .programs import (
+            invalidate_positions_program,
+            make_decode_step,
+            make_prefill_chunk_step,
+            make_verify_step,
+        )
 
         self.cfg = cfg
         self.num_slots = num_slots
@@ -190,6 +227,13 @@ class ContiguousBackend(CacheBackend):
             make_prefill_chunk_step(cfg), donate_argnums=(1, 2)
         )
         self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(3,))
+        # Speculative-decoding programs: compiled lazily at first use, so
+        # non-speculative engines never pay for them (their jit caches
+        # stay at 0 and the zero-recompile accounting still holds).
+        self._verify = jax.jit(make_verify_step(cfg), donate_argnums=(3,))
+        self._invalidate = jax.jit(
+            invalidate_positions_program, donate_argnums=(0,)
+        )
 
     @property
     def num_free_slots(self) -> int:
@@ -219,13 +263,24 @@ class ContiguousBackend(CacheBackend):
         )
         return logits
 
+    def verify(self, params, toks, poss):
+        logits, self.pool.cache = self._verify(
+            params, toks, poss, self.pool.cache
+        )
+        return logits
+
+    def invalidate_positions(self, positions):
+        self.pool.cache = self._invalidate(self.pool.cache, positions)
+
     def retire(self, slot: int):
         self.pool.release(slot)
 
     def jit_cache_sizes(self) -> tuple:
         return (self._decode._cache_size(),
                 self._prefill_chunk._cache_size(),
-                self.pool._clear._cache_size())
+                self.pool._clear._cache_size(),
+                self._verify._cache_size(),
+                self._invalidate._cache_size())
 
     def peak_cache_bytes(self) -> int:
         return sum(leaf.nbytes

@@ -47,6 +47,7 @@ from .programs import (  # noqa: F401  (re-exported; launch/specs.py uses)
 )
 from .sampling import GREEDY, SamplingParams, sample_tokens
 from .scheduler import Request, Scheduler
+from .spec_decode import SpecConfig, SpecDecoder
 
 
 # ---------------------------------------------------------------------------
@@ -66,7 +67,16 @@ class ServeEngine:
     ``num_blocks`` total pool blocks (default: capacity parity with the
     contiguous pool), ``prefix_cache`` to share common prompt prefixes
     through the radix tree, ``use_kernel`` for the Pallas paged-attention
-    decode kernel (default on; off = the jnp row-view gather oracle).
+    decode kernel (default on; off = the jnp row-view gather oracle),
+    ``cache_generated`` to also publish retired requests' generated
+    tokens into the radix tree (multi-turn prefix reuse).
+
+    ``spec`` (a SpecConfig) turns on speculative decoding
+    (serve/spec_decode.py): a self-drafting n-gram drafter proposes up to
+    spec.k tokens per row and one batched (B, k+1) verify step commits an
+    accepted prefix — the served stream is token-for-token the
+    non-speculative engine's at any temperature (exact-match acceptance
+    against the baseline sampler's own draws).
     """
 
     def __init__(self, cfg, params, batch_size: int, max_len: int,
@@ -75,7 +85,9 @@ class ServeEngine:
                  prefill_chunk: Optional[int] = None,
                  cache_dtype=jnp.bfloat16, backend: str = "contiguous",
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 prefix_cache: bool = True, use_kernel: bool = True):
+                 prefix_cache: bool = True, use_kernel: bool = True,
+                 cache_generated: bool = False,
+                 spec: Optional[SpecConfig] = None):
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -84,6 +96,10 @@ class ServeEngine:
         self.default_sampling = default_sampling
         self.seed = seed
         if backend == "contiguous":
+            if cache_generated:
+                raise ValueError(
+                    "cache_generated needs the paged backend's radix tree"
+                )
             self.backend = ContiguousBackend(cfg, batch_size, max_len,
                                              cache_dtype)
         elif backend == "paged":
@@ -91,6 +107,7 @@ class ServeEngine:
                 cfg, batch_size, max_len, cache_dtype,
                 block_size=block_size, num_blocks=num_blocks,
                 prefix_cache=prefix_cache, use_kernel=use_kernel,
+                cache_generated=cache_generated,
             )
         else:
             raise ValueError(f"unknown backend {backend!r}")
@@ -112,6 +129,9 @@ class ServeEngine:
         self._step = np.zeros((batch_size,), np.int32)
         self.decode_steps = 0  # batched decode model calls (perf counter)
         self.preemptions = 0
+        # Speculative decoding: SpecDecoder validates arch/backend support
+        # (rollbackable cache) and owns drafting/verify/accept state.
+        self._spec = SpecDecoder(self, spec) if spec is not None else None
         # Set by a preemption while other rows are live: admission pauses
         # until one of them RETIRES. Without this barrier two equal-sized
         # rows livelock — the preempted one instantly re-admits into its
@@ -173,14 +193,30 @@ class ServeEngine:
         self.sched.requeue(entry)
         entry.req.no_prefix_cache = True
         self.preemptions += 1
+        if self._spec is not None:
+            self._spec.drop_slot(entry.slot)
         # Hold admission until a live row retires and genuinely frees
         # memory; with no other live row the restart owns the whole pool.
         self._admission_hold = bool(self.sched.live)
 
+    def _retire_entry(self, entry):
+        """Normal completion: let the backend publish reusable state
+        (generated-token prefix caching), release the slot, and unblock
+        admission — memory was genuinely freed."""
+        self.backend.cache_finished(entry)
+        self.backend.retire(entry.slot)
+        if self._spec is not None:
+            self._spec.drop_slot(entry.slot)
+        self._admission_hold = False
+
     def _do_decode(self) -> int:
         """Sample every DECODE row from the logits buffer, retire finished
         rows, then one batched decode step for the survivors. Returns the
-        number of tokens emitted."""
+        number of tokens emitted. With speculation on, the whole phase is
+        delegated to the SpecDecoder (draft -> one (B, k+1) verify ->
+        accept/rollback)."""
+        if self._spec is not None:
+            return self._spec.decode_tick()
         entries = self.sched.decode_entries()
         if not entries:
             return 0
@@ -197,8 +233,7 @@ class ServeEngine:
             self._step[e.slot] += 1
             emitted += 1
             if self.sched.record_token(e, tok):
-                self.backend.retire(e.slot)
-                self._admission_hold = False  # memory actually freed
+                self._retire_entry(e)
             elif not self.backend.ensure_decode_block(e.slot, e.pos):
                 self._preempt(e)
             else:
@@ -233,9 +268,26 @@ class ServeEngine:
 
     def jit_cache_sizes(self) -> tuple:
         """Compiled-signature counts of every serving program (backend
-        programs + the sampler) — frozen after warmup means zero
-        recompiles under churn."""
-        return self.backend.jit_cache_sizes() + (self._sample._cache_size(),)
+        programs + the sampler + the speculative accept) — frozen after
+        warmup means zero recompiles under churn."""
+        sizes = self.backend.jit_cache_sizes() + (self._sample._cache_size(),)
+        if self._spec is not None:
+            sizes += (self._spec._accept._cache_size(),)
+        return sizes
+
+    def spec_stats(self) -> Optional[dict]:
+        """Speculation counters (None when speculation is off)."""
+        if self._spec is None:
+            return None
+        s = self._spec
+        return {
+            "verify_calls": s.verify_calls,
+            "drafted": s.drafted,
+            "accepted": s.accepted,
+            "tokens_emitted": s.tokens_emitted,
+            "acceptance_rate": s.acceptance_rate,
+            "calls_per_token": s.calls_per_token(),
+        }
 
     def peak_cache_bytes(self) -> int:
         return self.backend.peak_cache_bytes()
@@ -342,6 +394,7 @@ class WaveEngine:
                     r.out.append(tok)
                     if self.eos_id is not None and tok == self.eos_id:
                         r.done = True
+                        r.finish_reason = "eos"
                         r.t_done = now
             cur = nxt[:, None]
             pos += 1
@@ -350,6 +403,10 @@ class WaveEngine:
         for r in wave:
             if not r.done:
                 r.done = True
+                r.finish_reason = (
+                    "length" if len(r.out) >= r.max_new_tokens
+                    else "cache_ceiling"
+                )
                 r.t_done = now
         return steps + 1
 

@@ -16,7 +16,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..layers.attention import copy_kv_blocks, reset_block_pos
+from ..layers.attention import (
+    copy_kv_blocks,
+    invalidate_kv_positions,
+    invalidate_paged_positions,
+    reset_block_pos,
+)
 from ..layers.ssm import reset_ssm_rows
 from ..models import lm_apply
 from .cache_pool import pool_row, pool_write_row
@@ -79,6 +84,40 @@ def make_prefill_chunk_step(cfg):
         return cache, buf
 
     return prefill_chunk
+
+
+def make_verify_step(cfg):
+    """Speculative-decoding verify: (params, tokens(B,S), pos(B,S), cache)
+    -> (logits(B,S,V), cache). A multi-token decode continuation over the
+    contiguous pool (chunked-prefill semantics: this call's KV is written
+    first, each lane attends everything causally at or before it), with
+    logits at EVERY lane — lane j's logits are the target distribution
+    for the token after lane j, which the accept/resample step
+    (sampling.spec_accept_tokens) scores the drafts against. Lanes with
+    pos < 0 (inactive rows, unused draft lanes) are exact no-ops. One
+    fixed (B, k+1) signature: request churn and per-row draft counts
+    change values, never shapes."""
+
+    def verify(params, tokens, pos, cache):
+        logits, cache, _ = lm_apply(
+            params, cfg, tokens, positions=pos, cache=cache, mode="decode",
+        )
+        return logits, cache
+
+    return verify
+
+
+def invalidate_positions_program(cache, positions):
+    """Speculative rollback (contiguous): pos -> -1 for a (B, W) batch of
+    absolute positions in every attention layer (lanes < 0 drop). Leaves
+    the cache equal to never having written the rejected draft lanes."""
+    out = []
+    for layer in cache:
+        c = dict(layer)
+        if "attn" in c:
+            c["attn"] = invalidate_kv_positions(c["attn"], positions)
+        out.append(c)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -164,6 +203,38 @@ def make_decode_step_paged(cfg, use_kernel: bool = False):
         return logits, cache
 
     return decode
+
+
+def make_verify_step_paged(cfg, use_kernel: bool = False):
+    """Paged speculative verify: (params, tokens(B,S), pos(B,S),
+    tables(B,nb), cache) -> (logits(B,S,V), cache). Same contract as
+    `make_verify_step` through the block tables. ``use_kernel`` is
+    accepted for signature parity with the decode program, but S > 1
+    always takes the jnp gather route (see layers/attention.py — the
+    Pallas kernel is single-query)."""
+
+    def verify(params, tokens, pos, tables, cache):
+        logits, cache, _ = lm_apply(
+            params, cfg, tokens, positions=pos, cache=cache,
+            mode="decode", block_tables=tables, paged_kernel=use_kernel,
+        )
+        return logits, cache
+
+    return verify
+
+
+def invalidate_positions_paged_program(cache, positions, tables):
+    """Speculative rollback (paged): pos -> -1 through the block tables
+    for a (B, W) batch of absolute positions in every attention layer."""
+    out = []
+    for layer in cache:
+        c = dict(layer)
+        if "attn" in c:
+            c["attn"] = invalidate_paged_positions(
+                c["attn"], positions, tables
+            )
+        out.append(c)
+    return out
 
 
 def clear_blocks_program(cache, blocks):

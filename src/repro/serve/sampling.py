@@ -65,17 +65,38 @@ def _topp_mask(scaled, top_p):
     """Nucleus filter: smallest prefix of descending-prob tokens whose mass
     reaches top_p. `scaled` may already carry -inf from an upstream filter
     (softmax renormalizes over the survivors — sequential composition).
-    The top-1 token is always kept; top_p>=1 keeps all."""
+
+    Hardened guarantees (regression-tested in tests/test_sampling.py):
+    * The argmax lane survives unconditionally — even when ``top_p`` is
+      smaller than the single largest token probability (peaked logits),
+      the mask can never go all-False and feed categorical an all--inf
+      row. The guarantee is enforced directly on the argmax index, not
+      via the sort's rank-0 slot, so it holds under ties and any argsort
+      tie-breaking.
+    * ``top_p >= 1`` disables the filter exactly: float cumsum drift can
+      push an exclusive prefix sum of a long tail above 1.0, which would
+      silently mask the tiniest-probability tokens of a nominally
+      disabled filter."""
     probs = jax.nn.softmax(scaled, axis=-1)
     order = jnp.argsort(-probs, axis=-1)
     sp = jnp.take_along_axis(probs, order, axis=-1)
     cum_before = jnp.cumsum(sp, axis=-1) - sp  # exclusive cumsum
     keep_sorted = cum_before < top_p[:, None]
-    # rank 0 unconditionally: even top_p=0 must leave one sampleable token
-    keep_sorted = keep_sorted.at[:, 0].set(True)
     bidx = jnp.arange(scaled.shape[0])[:, None]
     keep = jnp.zeros(scaled.shape, bool).at[bidx, order].set(keep_sorted)
-    return keep
+    # even top_p=0 must leave one sampleable token: pin the argmax lane
+    keep = keep.at[bidx[:, 0], jnp.argmax(scaled, axis=-1)].set(True)
+    return keep | (top_p[:, None] >= 1.0)
+
+
+def _filtered_logits(logits, temperature, top_k, top_p):
+    """Temperature-scaled logits with the top-k mask and (renormalized)
+    nucleus mask applied sequentially — the distribution every sampled row
+    draws from. logits: (B, V) f32; params (B,). Returns (B, V) with
+    filtered lanes at -inf."""
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    after_k = jnp.where(_topk_mask(scaled, top_k), scaled, -jnp.inf)
+    return jnp.where(_topp_mask(after_k, top_p), after_k, -jnp.inf)
 
 
 def sample_tokens(logits, temperature, top_k, top_p, seed, step):
@@ -87,9 +108,7 @@ def sample_tokens(logits, temperature, top_k, top_p, seed, step):
     logits = logits.astype(jnp.float32)
     greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
-    after_k = jnp.where(_topk_mask(scaled, top_k), scaled, -jnp.inf)
-    masked = jnp.where(_topp_mask(after_k, top_p), after_k, -jnp.inf)
+    masked = _filtered_logits(logits, temperature, top_k, top_p)
 
     keys = jax.vmap(
         lambda s, t: jax.random.fold_in(jax.random.PRNGKey(s), t)
@@ -97,6 +116,76 @@ def sample_tokens(logits, temperature, top_k, top_p, seed, step):
     sampled = jax.vmap(jax.random.categorical)(keys, masked).astype(jnp.int32)
 
     return jnp.where(temperature > 0.0, sampled, greedy_tok)
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: vectorized accept / resample
+# ---------------------------------------------------------------------------
+
+
+def spec_accept_tokens(logits, drafts, n_draft, temperature, top_k, top_p,
+                       seed, step):
+    """Speculative-decoding accept step against a DETERMINISTIC drafter,
+    one jitted fixed-shape program for the whole batch.
+
+    logits: (B, K+1, V) target-model logits from the verify step —
+    ``logits[:, j]`` is the next-token distribution after consuming
+    verify lane j (lane 0 = the committed pending token, lanes 1..K the
+    draft tokens). drafts: (B, K) int32 (drafts[:, j] rides verify lane
+    j+1). n_draft: (B,) valid draft count per row. temperature/top_k/
+    top_p/seed/step: the per-request sampling suite (identical filtering
+    AND identical keys to `sample_tokens`).
+
+    The scheme is exact-match acceptance: lane j's "chain" token is what
+    the baseline engine would emit at that position — the argmax for
+    greedy rows, ``categorical(fold_in(PRNGKey(seed), step + j),
+    filtered_logits)`` for sampled rows (the very same key and masked
+    logits `sample_tokens` would use at step+j, so the draw is
+    bit-identical). A draft is accepted iff it EQUALS its chain token,
+    and the boundary lane emits the chain token itself. For a point-mass
+    drafter this accepts with probability q(draft) — the same rate as
+    Leviathan rejection sampling — but the emitted token at step s is a
+    pure function of (context, seed, s): speculative decoding is
+    TOKEN-FOR-TOKEN identical to the non-speculative engine at every
+    temperature, burst layout and memory-pressure history (preemption
+    replay cannot splice two different streams). Residual-resampling
+    would only beat exact-match for a *distributional* draft model —
+    recorded as a follow-up alongside the draft-LM drafter.
+
+    Returns ``(n_acc, tokens)``: row b accepts its first ``n_acc[b]``
+    drafts and emits ``tokens[b, :n_acc[b]+1]`` (accepted prefix + the
+    boundary chain token)."""
+    b, k1, v = logits.shape
+    k = k1 - 1
+    logits = logits.astype(jnp.float32)
+    greedy_chain = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B,K+1)
+
+    flat = logits.reshape(b * k1, v)
+    masked = _filtered_logits(
+        flat,
+        jnp.repeat(temperature, k1), jnp.repeat(top_k, k1),
+        jnp.repeat(top_p, k1),
+    ).reshape(b, k1, v)
+
+    def row_keys(s, t):
+        return jax.vmap(
+            lambda j: jax.random.fold_in(jax.random.PRNGKey(s), t + j)
+        )(jnp.arange(k1))
+
+    keys = jax.vmap(row_keys)(seed, step)  # (B, K+1) keys
+    sampled_chain = jax.vmap(jax.vmap(jax.random.categorical))(
+        keys, masked
+    ).astype(jnp.int32)
+    chain = jnp.where(
+        (temperature > 0.0)[:, None], sampled_chain, greedy_chain
+    )
+
+    lanes = jnp.arange(k)
+    ok = (drafts == chain[:, :k]) & (lanes[None] < n_draft[:, None])
+    n_acc = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)  # (B,)
+    # accepted lanes equal their chain token by construction, so the
+    # emitted burst is simply chain[:, :n_acc+1]
+    return n_acc.astype(jnp.int32), chain
 
 
 # --- single-shot convenience wrappers (wave engine / examples / tests) ----

@@ -41,6 +41,11 @@ class Request:
     sampling: SamplingParams = field(default_factory=lambda: GREEDY)
     out: List[int] = field(default_factory=list)
     done: bool = False
+    # Why generation stopped: "eos" (sampled the stop token), "length"
+    # (max_new_tokens reached), or "cache_ceiling" (prompt+generation hit
+    # the engine's max_len — a truncation, NOT a normal completion; the
+    # bench and examples report it separately). None while running.
+    finish_reason: Optional[str] = None
     on_token: Optional[Callable[["Request", int], None]] = None
     t_submit: float = 0.0
     t_first_token: float = 0.0
@@ -162,6 +167,7 @@ class Scheduler:
         req.stream_resume = max(req.stream_resume, len(req.out))
         req.out = []
         req.done = False
+        req.finish_reason = None
         self.queue.appendleft(req)
 
     # -- tick queries ------------------------------------------------------
@@ -197,9 +203,35 @@ class Scheduler:
         out_of_budget = entry.n_generated >= req.max_new_tokens
         cache_full = entry.pos >= self.max_len
         if hit_eos or out_of_budget or cache_full:
+            # EOS dominates (a natural stop even at the budget edge);
+            # cache_ceiling only when nothing else explains the stop, so
+            # a truncation is never mislabeled as a completion.
+            req.finish_reason = (
+                "eos" if hit_eos else
+                "length" if out_of_budget else "cache_ceiling"
+            )
             req.done = True
             req.t_done = now
             del self.live[entry.slot]
             entry.state = FREE
             return True
         return False
+
+    def record_tokens(self, entry: SlotEntry, tokens) -> "tuple[int, bool]":
+        """Account a speculative burst for a DECODE row: commit `tokens`
+        in order with exactly `record_token`'s EOS/budget/ceiling
+        accounting, TRUNCATING at the first stop — tokens an accepted
+        draft carried past an EOS are discarded, never appended to
+        ``req.out`` and never streamed. ``entry.pos`` must be the write
+        position of the row's pending token (the burst's verify lane 0);
+        it advances to each committed token's write position before its
+        accounting, mirroring the one-token path where `record_token`
+        runs with ``entry.pos`` at the recorded token's write position.
+        Returns ``(n_committed, finished)``."""
+        n = 0
+        for tok in tokens:
+            entry.pos += 1
+            n += 1
+            if self.record_token(entry, int(tok)):
+                return n, True
+        return n, False

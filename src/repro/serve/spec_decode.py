@@ -1,0 +1,304 @@
+"""Speculative decoding over the serving cache pool.
+
+The per-step cost of decode is one full model call per generated token;
+speculation breaks that coupling losslessly: a cheap DRAFTER proposes up
+to k tokens per row, a single batched (B, k+1) VERIFY step runs them all
+through the target model (the chunked-prefill continuation path — one
+jitted fixed-shape program, zero recompiles under churn), and an ACCEPT
+step commits a prefix of the draft plus one boundary token. Acceptance
+is exact-match against the baseline sampler's own chain (greedy: the
+argmax; sampled: the categorical draw on the identical
+``fold_in(seed, step)`` key — see sampling.spec_accept_tokens), so the
+served stream is TOKEN-FOR-TOKEN the non-speculative engine's at every
+temperature, with the same acceptance probability a point-mass-drafter
+rejection sampler (Leviathan et al. / Chen et al.) would give.
+
+Drafting is SELF-drafting by default: `NgramDrafter` proposes the
+continuation of the most recent earlier occurrence of the context's
+trailing n-gram (prompt-lookup decoding) — no second model, and very
+effective on repetitive continuations, retrieval-grounded prompts, and
+code. The `Drafter` interface is one method, so a small draft LM can
+slot in later without touching the engine.
+
+Rollback invariants (tested in tests/test_spec_decode.py):
+
+* Rejected draft tokens DID write KV during the verify (write-then-read
+  is the chunked-prefill contract). Their entries are unreachable by
+  construction — every rejected position is strictly beyond the row's
+  committed frontier, so causal masking hides it from every future query
+  until the row's own writes overwrite it — and the engine additionally
+  scrubs them (pos -> -1) so the cache state is *equal* to never having
+  drafted, not merely indistinguishable.
+* The paged backend un-reserves blocks that only held rejected tokens
+  (`rollback_burst`): block tables and refcounts after a rollback match
+  the non-speculative path exactly.
+* Per-request RNG counters advance by the tokens a burst actually
+  committed, and the token at step s is a pure function of (context,
+  seed, s) — independent of burst layout, draft quality, or transient
+  memory pressure — so a preempted request replays the identical stream
+  on its retry at ANY temperature (burst boundaries may differ on the
+  replay; the tokens cannot).
+
+Backend support: the paged backend is fully supported (no ring — every
+position owns a unique (block, offset), so stale writes can always be
+rolled back); the contiguous backend is supported when its rings never
+wrap (no sliding-window layer shorter than max_len — on a wrapped ring a
+rejected write EVICTS a live entry, which cannot be restored). SSM/
+hybrid archs are rejected: recurrent state advanced by a rejected token
+cannot be rewound.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Protocol, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sampling import spec_accept_tokens
+
+
+class Drafter(Protocol):
+    """Anything that proposes draft tokens from a row's committed context
+    (prompt + generated so far, ending with the pending token). MUST be
+    deterministic in the context: preemption replay and the jit-cache
+    guarantees rely on drafts being a pure function of the tokens."""
+
+    def propose(self, context: Sequence[int], k: int) -> List[int]:
+        """Up to `k` draft tokens continuing `context` ([] = no draft —
+        the row falls back to a plain one-token step this tick)."""
+        ...
+
+
+class NgramDrafter:
+    """Prompt-lookup self-drafting: find the most recent earlier
+    occurrence of the context's trailing n-gram (longest n first) and
+    propose the tokens that followed it. O(n_gram * len) per call on the
+    host — contexts are at most max_len tokens, and the scan is trivially
+    cheap next to a model call."""
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        assert 1 <= min_n <= max_n
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def propose(self, context: Sequence[int], k: int) -> List[int]:
+        ctx = list(context)
+        for n in range(min(self.max_n, len(ctx) - 1), self.min_n - 1, -1):
+            tail = ctx[-n:]
+            # scan right-to-left: most recent match wins (recency beats
+            # frequency for continuation prediction)
+            for i in range(len(ctx) - n - 1, -1, -1):
+                if ctx[i: i + n] == tail:
+                    cont = ctx[i + n: i + n + k]
+                    if cont:
+                        return cont
+        return []
+
+
+@dataclass
+class SpecConfig:
+    """Engine-facing speculative-decoding knobs.
+
+    ``k``: draft tokens per verify step (the verify program's fixed lane
+    count is k+1). ``drafter``: any `Drafter`; None = NgramDrafter with
+    the given n-gram bounds."""
+
+    k: int = 4
+    ngram_max: int = 3
+    ngram_min: int = 1
+    drafter: Optional[Drafter] = None
+
+
+class SpecDecoder:
+    """Drives one ServeEngine's decode phase speculatively.
+
+    Owns the per-slot pending token (sampled, recorded, streamed — but
+    its KV not yet written; it rides verify lane 0 next tick), the
+    drafter, the jitted accept program, and the acceptance stats the
+    bench reports. The engine delegates `_do_decode` here when
+    speculation is enabled; admission, prefill, preemption and retirement
+    stay engine-owned.
+    """
+
+    def __init__(self, engine, cfg: SpecConfig):
+        mcfg = engine.cfg
+        if cfg.k < 1:
+            raise ValueError("SpecConfig.k must be >= 1")
+        if mcfg.has_ssm():
+            raise ValueError(
+                "speculative decoding needs a rollbackable cache; "
+                "recurrent SSM state advanced by a rejected draft cannot "
+                "be rewound"
+            )
+        if mcfg.attention is None:
+            raise ValueError("speculative decoding needs an attention LM")
+        from .cache_pool import ContiguousBackend
+        a = mcfg.attention
+        if (isinstance(engine.backend, ContiguousBackend)
+                and a.sliding_window is not None
+                and a.sliding_window < engine.max_len):
+            raise ValueError(
+                "speculative decoding on the contiguous backend needs "
+                "non-wrapping rings (sliding_window < max_len evicts live "
+                "entries on a rejected write); use backend='paged', which "
+                "stores every position and masks the window instead"
+            )
+        if cfg.k + 1 > engine.backend.max_chunk:
+            raise ValueError(
+                f"spec k={cfg.k} exceeds the backend burst limit "
+                f"({engine.backend.max_chunk - 1})"
+            )
+        self.eng = engine
+        self.k = cfg.k
+        self.drafter = cfg.drafter or NgramDrafter(cfg.ngram_max,
+                                                   cfg.ngram_min)
+        self._accept = jax.jit(spec_accept_tokens)
+        # pending[slot] = sampled-but-not-fed token id (-1 = none); it is
+        # already in req.out/streamed — only its KV write is outstanding.
+        self._pending = np.full((engine.batch,), -1, np.int64)
+        # stats (bench_serve reports these)
+        self.verify_calls = 0
+        self.drafted = 0
+        self.accepted = 0
+        self.tokens_emitted = 0
+
+    # -- stats -------------------------------------------------------------
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the target model accepted."""
+        return self.accepted / max(self.drafted, 1)
+
+    def calls_per_token(self) -> float:
+        """BATCHED verify calls per emitted token across all rows (one
+        verify advances every live row). For the per-row
+        calls-per-token metric the spec-decoding literature quotes,
+        normalize by the live batch size — benchmarks/bench_serve.py
+        does, and gates it < 1.0."""
+        return self.verify_calls / max(self.tokens_emitted, 1)
+
+    def drop_slot(self, slot: int):
+        """Forget a slot's pending token (preemption/retirement)."""
+        self._pending[slot] = -1
+
+    def reset_stats(self):
+        """Zero the speculation counters (bench warmup: compile runs must
+        not pollute the measured acceptance rate)."""
+        self.verify_calls = 0
+        self.drafted = 0
+        self.accepted = 0
+        self.tokens_emitted = 0
+
+    # -- the tick ----------------------------------------------------------
+
+    def decode_tick(self) -> int:
+        """Speculative replacement for ServeEngine._do_decode: phase 1
+        samples first tokens for rows fresh out of prefill (from the
+        prefill logits, exactly like the baseline engine — no model
+        call); phase 2 drafts, verifies in one (B, k+1) model call,
+        accepts via rejection sampling, commits with EOS/budget/ceiling
+        truncation, and rolls back rejected state. Returns tokens
+        emitted this tick."""
+        eng = self.eng
+        sched = eng.sched
+        entries = sched.decode_entries()
+        if not entries:
+            return 0
+        emitted_total = 0
+
+        fresh = [e for e in entries if self._pending[e.slot] < 0]
+        if fresh:
+            toks = np.asarray(eng._sample(
+                eng._logits, eng._temp, eng._top_k, eng._top_p,
+                eng._seed, eng._step,
+            ))
+            for e in fresh:
+                tok = int(toks[e.slot])
+                eng._step[e.slot] += 1
+                emitted_total += 1
+                self.tokens_emitted += 1
+                if sched.record_token(e, tok):
+                    eng._retire_entry(e)
+                else:
+                    self._pending[e.slot] = tok
+
+        live = [e for e in entries if self._pending[e.slot] >= 0]
+        if not live:
+            return emitted_total
+
+        k = self.k
+        in_toks = np.full((eng.batch, k + 1), eng.pad_id, np.int32)
+        in_pos = np.full((eng.batch, k + 1), -1, np.int32)
+        n_draft = np.zeros((eng.batch,), np.int32)
+        plans = {}  # slot -> (entry, lane-0 write position)
+        for e in list(live):
+            slot = e.slot
+            # cap drafts at the remaining budget (tokens past it would be
+            # truncated anyway) and the cache ceiling (a position >=
+            # max_len has no slot to write — and on a ring it would wrap
+            # onto live entries)
+            budget_left = e.req.max_new_tokens - e.n_generated
+            k_cap = max(0, min(k, budget_left - 1, eng.max_len - 1 - e.pos))
+            cover = eng.backend.reserve_burst(slot, e.pos, k_cap + 1)
+            if cover <= 0:
+                eng._preempt(e)  # drops this slot's pending token too
+                continue
+            drafts = []
+            if cover > 1:
+                drafts = list(self.drafter.propose(
+                    list(e.req.prompt) + list(e.req.out), cover - 1
+                ))[: cover - 1]
+            m = len(drafts)
+            in_toks[slot, 0] = self._pending[slot]
+            if m:
+                in_toks[slot, 1: 1 + m] = drafts
+            in_pos[slot, : 1 + m] = e.pos + np.arange(1 + m)
+            n_draft[slot] = m
+            self.drafted += m
+            plans[slot] = (e, e.pos)
+        if not plans:
+            return emitted_total
+
+        logits = eng.backend.verify(
+            eng.params, jnp.asarray(in_toks), jnp.asarray(in_pos)
+        )
+        eng.decode_steps += 1
+        self.verify_calls += 1
+        n_acc, out_toks = self._accept(
+            logits, jnp.asarray(in_toks[:, 1:]), jnp.asarray(n_draft),
+            eng._temp, eng._top_k, eng._top_p, eng._seed, eng._step,
+        )
+        n_acc = np.asarray(n_acc)
+        out_toks = np.asarray(out_toks)
+
+        # Rejected-lane scrub: positions the verify wrote that acceptance
+        # disowned (lanes n_acc+1 .. n_draft). One fixed-shape program
+        # per tick — run even when empty so its jit cache is warmed
+        # deterministically (zero-recompile accounting).
+        inval = np.full((eng.batch, k + 1), -1, np.int32)
+        rollbacks = []
+        for slot, (e, base) in plans.items():
+            na = int(n_acc[slot])
+            burst = [int(t) for t in out_toks[slot, : na + 1]]
+            committed, finished = sched.record_tokens(e, burst)
+            eng._step[slot] += committed
+            emitted_total += committed
+            self.tokens_emitted += committed
+            self.accepted += na
+            if finished:
+                eng._retire_entry(e)  # drops the pending token too
+            else:
+                # committed == len(burst) here (no truncation), so the
+                # last burst token is the new pending; e.pos is now its
+                # write position.
+                self._pending[slot] = burst[-1]
+                rej = np.arange(na + 1, int(n_draft[slot]) + 1)
+                if rej.size:
+                    inval[slot, rej] = base + rej
+                rollbacks.append((slot, e.pos))
+        eng.backend.invalidate_positions(jnp.asarray(inval))
+        for slot, next_pos in rollbacks:
+            eng.backend.rollback_burst(slot, next_pos)
+        return emitted_total

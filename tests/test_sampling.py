@@ -4,7 +4,9 @@ import numpy as np
 
 from repro.serve.sampling import (
     SamplingParams,
+    _filtered_logits,
     sample_tokens,
+    spec_accept_tokens,
     stack_params,
 )
 
@@ -123,3 +125,187 @@ def test_filters_compose():
     params = [SamplingParams(temperature=1.0, top_k=2, top_p=0.05, seed=0)]
     for step in range(20):
         assert int(_call(logits, params, step=step)[0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# nucleus-filter hardening (regression: peaked logits, HF-reference parity)
+# ---------------------------------------------------------------------------
+
+
+def test_top_p_below_peak_keeps_argmax():
+    """Regression: when top_p is SMALLER than the single largest token
+    probability (peaked logits), the nucleus mask must still keep the
+    argmax lane — an all-masked row would hand categorical an all--inf
+    distribution. Sweep the pathological corner across temperatures and
+    peak strengths."""
+    for peak in (5.0, 10.0, 30.0, 100.0):
+        for temp in (0.25, 1.0, 4.0):
+            for top_p in (1e-6, 0.01, 0.3):
+                logits = np.zeros((2, 8), np.float32)
+                logits[0, 3] = peak
+                logits[1, 5] = peak
+                params = [SamplingParams(temperature=temp, top_p=top_p,
+                                         seed=b) for b in range(2)]
+                toks = _call(logits, params)
+                np.testing.assert_array_equal(
+                    toks, [3, 5], err_msg=f"{peak=} {temp=} {top_p=}"
+                )
+
+
+def _hf_reference_mask(logits, temperature, top_k, top_p):
+    """Scalar HF-style reference: temperature scale, keep the top-k
+    logits, then keep the smallest descending-prob prefix whose mass
+    reaches top_p (always at least one token), renormalizing after the
+    top-k step. Returns the boolean support of one row."""
+    scaled = logits / max(temperature, 1e-6)
+    keep = np.ones_like(scaled, bool)
+    if top_k > 0:
+        thr = np.sort(scaled)[::-1][min(top_k, len(scaled)) - 1]
+        keep &= scaled >= thr
+    if top_p < 1.0:
+        z = np.where(keep, scaled, -np.inf)
+        z = z - z.max()
+        p = np.exp(z) / np.exp(z).sum()
+        order = np.argsort(-p, kind="stable")
+        cum = 0.0
+        nucleus = np.zeros_like(keep)
+        for i in order:
+            nucleus[i] = True
+            cum += p[i]
+            if cum >= top_p:
+                break
+        keep &= nucleus
+    return keep
+
+
+def test_topk_topp_composition_matches_scalar_reference():
+    """The vectorized filters' support must equal the scalar HF-style
+    reference on random batches across the parameter grid."""
+    rng = np.random.RandomState(7)
+    for trial in range(5):
+        logits = (rng.randn(6, 24) * rng.uniform(0.5, 4)).astype(np.float32)
+        temps = rng.uniform(0.2, 3.0, size=6).astype(np.float32)
+        ks = rng.choice([0, 1, 3, 8, 24], size=6).astype(np.int32)
+        ps = rng.choice([0.05, 0.3, 0.7, 0.95, 1.0], size=6).astype(
+            np.float32)
+        masked = np.asarray(_filtered_logits(
+            jnp.asarray(logits), jnp.asarray(temps), jnp.asarray(ks),
+            jnp.asarray(ps),
+        ))
+        got = np.isfinite(masked)
+        for b in range(6):
+            want = _hf_reference_mask(logits[b], float(temps[b]),
+                                      int(ks[b]), float(ps[b]))
+            np.testing.assert_array_equal(
+                got[b], want,
+                err_msg=f"{trial=} {b=} k={ks[b]} p={ps[b]} t={temps[b]}",
+            )
+
+
+# ---------------------------------------------------------------------------
+# speculative accept/resample (serve/spec_decode.py's device half)
+# ---------------------------------------------------------------------------
+
+
+def _accept(logits, drafts, n_draft, temp, top_k=0, top_p=1.0, seed=0,
+            step=0):
+    b = logits.shape[0]
+    n_acc, toks = spec_accept_tokens(
+        jnp.asarray(logits, jnp.float32), jnp.asarray(drafts, jnp.int32),
+        np.full((b,), n_draft, np.int32), np.full((b,), temp, np.float32),
+        np.full((b,), top_k, np.int32), np.full((b,), top_p, np.float32),
+        np.full((b,), seed, np.int32), np.full((b,), step, np.int32),
+    )
+    return np.asarray(n_acc), np.asarray(toks)
+
+
+def test_spec_accept_greedy_matches_argmax_chain():
+    """Greedy rows accept exactly the drafts matching the argmax chain
+    and emit the argmax at the first mismatch (or the bonus argmax)."""
+    rng = np.random.RandomState(0)
+    logits = rng.randn(1, 4, 16).astype(np.float32)
+    chain = logits[0].argmax(-1)  # (4,)
+    # perfect drafts: all accepted + bonus
+    n, t = _accept(logits, chain[None, :3], 3, temp=0.0)
+    assert n[0] == 3 and list(t[0, :4]) == list(chain)
+    # mismatch at lane 1: accept 1, emit argmax of lane 1
+    drafts = chain[:3].copy()
+    drafts[1] = (drafts[1] + 1) % 16
+    n, t = _accept(logits, drafts[None], 3, temp=0.0)
+    assert n[0] == 1 and list(t[0, :2]) == [chain[0], chain[1]]
+    # no drafts: plain decode, emit argmax of lane 0
+    n, t = _accept(logits, np.zeros((1, 3), np.int32), 0, temp=0.0)
+    assert n[0] == 0 and t[0, 0] == chain[0]
+
+
+def test_spec_accept_marginal_matches_baseline_sampler():
+    """The emitted token at the first burst position must be distributed
+    exactly like the baseline sampler's draw from the same logits —
+    whatever the draft was. Empirical check over many seeds on a toy
+    vocab, draft = a mid-probability token."""
+    rng = np.random.RandomState(1)
+    v = 8
+    logits = np.tile(rng.randn(1, 1, v).astype(np.float32), (1, 3, 1))
+    target = np.exp(logits[0, 0]) / np.exp(logits[0, 0]).sum()
+    draft = int(np.argsort(-target)[2])  # neither peak nor tail
+    counts = np.zeros(v)
+    trials = 4000
+    for s in range(trials):
+        _, t = _accept(logits, np.full((1, 2), draft, np.int32), 2,
+                       temp=1.0, seed=s)
+        counts[t[0, 0]] += 1
+    emp = counts / trials
+    # generous tolerance: 4000 draws, 8 bins -> ~3 sigma of a p=0.25 bin
+    assert np.abs(emp - target).max() < 0.035, (emp, target)
+    # and the accept rate of the draft lane is ~q(draft): the draft token
+    # appears at position 0 with prob q(d) + residual 0 = q(d)
+    assert abs(emp[draft] - target[draft]) < 0.035
+
+
+def test_spec_accept_respects_filters():
+    """Acceptance is judged against the FILTERED target distribution: a
+    draft outside the top-k support can never be accepted, and the
+    resampled token stays inside the support."""
+    logits = np.zeros((1, 3, 8), np.float32)
+    logits[0, :, :3] = [3.0, 2.5, 2.0]  # top_k=2 support: {0, 1}
+    for s in range(50):
+        n, t = _accept(logits, np.full((1, 2), 5, np.int32), 2,
+                       temp=1.0, top_k=2, seed=s)
+        assert n[0] == 0
+        assert t[0, 0] in (0, 1)
+
+
+def test_spec_accept_lanes_bitwise_match_baseline_sampler():
+    """Exact-match acceptance: lane j's chain token must be BIT-identical
+    to what `sample_tokens` would draw from the same logits at step+j —
+    same key, same filtered distribution — for greedy and sampled rows
+    alike. This is the property that makes speculative serving
+    token-for-token the baseline engine at any temperature."""
+    rng = np.random.RandomState(3)
+    logits = rng.randn(3, 4, 16).astype(np.float32)
+    temp = np.array([0.0, 1.0, 0.7], np.float32)
+    top_k = np.array([0, 5, 0], np.int32)
+    top_p = np.array([1.0, 1.0, 0.9], np.float32)
+    seed = np.array([4, 5, 6], np.int32)
+    step0 = np.array([0, 3, 10], np.int32)
+    _, chain = spec_accept_tokens(
+        jnp.asarray(logits), np.zeros((3, 3), np.int32),
+        np.full((3,), 3, np.int32), temp, top_k, top_p, seed, step0,
+    )
+    chain = np.asarray(chain)
+    for j in range(4):
+        want = np.asarray(sample_tokens(
+            jnp.asarray(logits[:, j]), temp, top_k, top_p, seed, step0 + j,
+        ))
+        np.testing.assert_array_equal(chain[:, j], want, err_msg=f"lane {j}")
+
+
+def test_spec_accept_deterministic_in_seed_and_step():
+    rng = np.random.RandomState(2)
+    logits = rng.randn(2, 4, 16).astype(np.float32)
+    drafts = rng.randint(0, 16, size=(2, 3))
+    a = _accept(logits, drafts, 3, temp=1.0, seed=9, step=4)
+    b = _accept(logits, drafts, 3, temp=1.0, seed=9, step=4)
+    c = _accept(logits, drafts, 3, temp=1.0, seed=9, step=5)
+    np.testing.assert_array_equal(a[1], b[1])
+    assert not np.array_equal(a[1], c[1]) or not np.array_equal(a[0], c[0])

@@ -1,0 +1,400 @@
+"""Speculative-decoding correctness: greedy token-for-token parity with
+the non-speculative engines across arch families, statistically unchanged
+sampled distributions, EOS-inside-burst truncation, exact block/refcount
+rollback, drafter behaviour, finish reasons, and zero recompiles."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import lm_init
+from repro.serve import (
+    NgramDrafter,
+    Request,
+    SamplingParams,
+    ServeEngine,
+    SpecConfig,
+)
+
+_PARAMS = {}
+
+
+def _setup(name):
+    if name not in _PARAMS:
+        cfg = reduced(get_config(name))
+        _PARAMS[name] = (cfg, lm_init(jax.random.PRNGKey(0), cfg))
+    return _PARAMS[name]
+
+
+_PROMPTS = [[1, 2, 3, 4, 5], [9, 8, 7], [4] * 9]
+
+
+def _run(name, spec, *, max_new=12, max_len=64, eos=None, kw=None,
+         sampling=None, batch=2):
+    cfg, params = _setup(name)
+    eng = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                      eos_id=eos, spec=spec, **(kw or {}))
+    reqs = [
+        Request(prompt=list(p), max_new_tokens=max_new,
+                sampling=sampling or SamplingParams())
+        for p in _PROMPTS
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    return eng, reqs
+
+
+_PAGED = {"kw": {"backend": "paged", "block_size": 8}}
+
+
+# ---------------------------------------------------------------------------
+# greedy parity — the acceptance criterion
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "gemma3-27b", "qwen2-0.5b"])
+def test_greedy_spec_matches_baseline_paged(arch):
+    """Greedy speculation must be token-for-token the plain paged engine's
+    stream on dense, GQA-bias, and sliding-window arch families —
+    whatever the drafter proposes, acceptance keeps exactly the argmax
+    chain."""
+    _, base = _run(arch, None, **_PAGED)
+    eng, spec = _run(arch, SpecConfig(k=4), **_PAGED)
+    assert [r.out for r in spec] == [r.out for r in base]
+    assert eng.spec_stats()["verify_calls"] > 0
+
+
+def test_greedy_spec_matches_baseline_contiguous():
+    """Full-length rings (no sliding window) support speculation on the
+    contiguous backend too."""
+    _, base = _run("llama3-8b", None)
+    _, spec = _run("llama3-8b", SpecConfig(k=3))
+    assert [r.out for r in spec] == [r.out for r in base]
+
+
+def test_spec_counts_fewer_model_calls():
+    """On a repetitive greedy stream the n-gram drafter must actually
+    accelerate: strictly fewer decode model calls than the plain engine
+    on the SAME workload (same batch — batching amortization cancels
+    out), with a nonzero acceptance rate."""
+    plain_eng, _ = _run("llama3-8b", None, max_new=24, **_PAGED)
+    eng, reqs = _run("llama3-8b", SpecConfig(k=4), max_new=24, **_PAGED)
+    stats = eng.spec_stats()
+    assert stats["accepted"] > 0, "no draft token was ever accepted"
+    assert eng.decode_steps < plain_eng.decode_steps
+
+
+# ---------------------------------------------------------------------------
+# unsupported configurations are rejected loudly
+# ---------------------------------------------------------------------------
+
+
+def test_spec_rejects_ssm_archs():
+    cfg, params = _setup("mamba2-370m")
+    with pytest.raises(ValueError, match="SSM"):
+        ServeEngine(cfg, params, batch_size=2, max_len=64,
+                    backend="paged", spec=SpecConfig(k=4))
+
+
+def test_spec_rejects_wrapping_contiguous_ring():
+    """gemma3's reduced sliding window (16) < max_len: a rejected write
+    would evict live ring entries — contiguous speculation must refuse
+    and point at the paged backend (which stores every position)."""
+    cfg, params = _setup("gemma3-27b")
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, batch_size=2, max_len=64,
+                    spec=SpecConfig(k=4))
+
+
+# ---------------------------------------------------------------------------
+# EOS inside an accepted burst
+# ---------------------------------------------------------------------------
+
+
+def test_eos_inside_burst_truncates():
+    """When EOS rides in mid-burst (accepted draft), tokens after it must
+    be discarded — never appended, never streamed — and the stream must
+    equal the non-speculative engine's with the same eos_id."""
+    _, probe = _run("llama3-8b", None, max_new=12, **_PAGED)
+    eos = probe[0].out[2]  # fires mid-stream, inside the first bursts
+    _, base = _run("llama3-8b", None, max_new=12, eos=eos, **_PAGED)
+
+    cfg, params = _setup("llama3-8b")
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=64, eos_id=eos,
+                      backend="paged", block_size=8, spec=SpecConfig(k=4))
+    streamed = {}
+    reqs = []
+    for p in _PROMPTS:
+        r = Request(prompt=list(p), max_new_tokens=12)
+        streamed[id(r)] = []
+        r.on_token = lambda req, tok: streamed[id(req)].append(tok)
+        reqs.append(r)
+        eng.submit(r)
+    eng.run()
+    assert [r.out for r in reqs] == [r.out for r in base]
+    for r in reqs:
+        assert streamed[id(r)] == r.out, "streamed past the truncation"
+        if r.finish_reason == "eos":
+            assert r.out[-1] == eos and eos not in r.out[:-1]
+
+
+def test_finish_reasons_all_paths():
+    """eos / length / cache_ceiling are distinguished, speculative or
+    not."""
+    cfg, params = _setup("llama3-8b")
+    for spec in (None, SpecConfig(k=4)):
+        # length: budget exhausted
+        eng, reqs = _run("llama3-8b", spec, max_new=4, **_PAGED)
+        assert all(r.finish_reason == "length" for r in reqs)
+        # cache_ceiling: prompt+generation hits max_len before the budget.
+        # engine.submit validates prompt+max_new <= max_len (so well-formed
+        # traffic can never hit the ceiling); inject via the scheduler to
+        # exercise the defensive path.
+        eng = ServeEngine(cfg, params, batch_size=1, max_len=16,
+                          backend="paged", block_size=8, spec=spec)
+        r = Request(prompt=list(range(1, 11)), max_new_tokens=32)
+        eng.sched.submit(r)
+        eng.run()
+        assert r.done and r.finish_reason == "cache_ceiling"
+        assert len(r.prompt) + len(r.out) == 17  # emitted at the ceiling
+        # eos
+        _, probe = _run("llama3-8b", None, max_new=8, **_PAGED)
+        eng, reqs = _run("llama3-8b", spec, max_new=8,
+                         eos=probe[0].out[1], **_PAGED)
+        assert any(r.finish_reason == "eos" for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# rollback leaves block/refcount state identical to never-having-drafted
+# ---------------------------------------------------------------------------
+
+
+class _GarbageDrafter:
+    """Proposes tokens the greedy chain will (almost surely) reject."""
+
+    def __init__(self, vocab):
+        self.vocab = vocab
+
+    def propose(self, context, k):
+        return [(context[-1] + 7919 + i) % self.vocab for i in range(k)]
+
+
+def test_rollback_restores_block_manager_state():
+    """Every speculative tick with a drafter designed to be rejected must
+    leave the BlockManager in the never-having-drafted state: the row's
+    blocks cover exactly positions [0, e.pos] (the footprint
+    `ensure_decode_block(e.pos)` leaves on the non-speculative path —
+    e.pos is the pending token's write position), every block refcount
+    is 1, nothing leaks from the free list, and every pool `pos` entry
+    beyond the committed frontier is scrubbed back to -1."""
+    cfg, params = _setup("llama3-8b")
+    bs = 4
+    spec_cfg = SpecConfig(k=4, drafter=_GarbageDrafter(cfg.vocab_size))
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                      backend="paged", block_size=bs,
+                      prefix_cache=False, spec=spec_cfg)
+    req = Request(prompt=[5, 4, 3, 2, 1], max_new_tokens=10)
+    eng.submit(req)
+    be = eng.backend
+    checked = 0
+    while not req.done:
+        eng.step()
+        live = list(eng.sched.live.values())
+        if not live or live[0].state != "decode":
+            continue
+        (e,) = live
+        row = be.tables[e.slot]
+        n_blocks = int((row != 0).sum())
+        want = e.pos // bs + 1  # blocks covering positions 0..e.pos
+        assert n_blocks == want, (n_blocks, want, e.pos)
+        assert (row[want:] == 0).all(), "burst block beyond e.pos leaked"
+        for b in row[:want]:
+            assert be.mgr.ref[int(b)] == 1
+        assert be.mgr.num_used == n_blocks
+        # committed frontier = e.pos - 1 (the pending token at e.pos is
+        # recorded but not yet written); beyond it every pool entry the
+        # row's blocks hold must be scrubbed to -1
+        frontier = e.pos - 1
+        pos0 = np.asarray(eng.backend.cache[0]["attn"]["pos"])
+        for lb, b in enumerate(row[:want]):
+            blk = pos0[int(b)]
+            for off in range(bs):
+                logical = lb * bs + off
+                if logical <= frontier:
+                    assert blk[off] == logical, (lb, off, blk[off])
+                else:
+                    assert blk[off] == -1, (
+                        f"stale speculative write at {logical}: {blk[off]}"
+                    )
+        checked += 1
+    assert checked >= 5, "loop never inspected a live decode row"
+    assert eng.spec_stats()["drafted"] > 0
+    assert eng.spec_stats()["accepted"] == 0  # garbage got rejected
+    # drained: everything returns to the free list
+    assert be.mgr.num_used == 0
+
+    # and the stream itself equals the plain engine's
+    plain = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                        backend="paged", block_size=bs, prefix_cache=False)
+    ref = Request(prompt=[5, 4, 3, 2, 1], max_new_tokens=10)
+    plain.submit(ref)
+    plain.run()
+    assert req.out == ref.out
+
+
+def test_rollback_all_blocks_freed_at_drain():
+    """After a speculative run drains, the pool must be fully free — no
+    block leaked by burst reservations."""
+    eng, _ = _run("llama3-8b", SpecConfig(k=4), max_new=20,
+                  kw={"backend": "paged", "block_size": 4,
+                      "prefix_cache": False})
+    assert eng.backend.mgr.num_used == 0
+    assert eng.backend.num_free_slots == eng.batch
+
+
+def test_preemption_under_pressure_with_spec():
+    """Burst reservations must degrade (shrink/preempt), not corrupt: a
+    pool too small for two rows still finishes both with the exact
+    unconstrained greedy streams."""
+    cfg, params = _setup("llama3-8b")
+
+    def mk():
+        return [Request(prompt=[3, 1, 4, 1, 5, 9, 2, 6],
+                        max_new_tokens=12) for _ in range(2)]
+
+    ref = mk()
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=32)
+    for r in ref:
+        eng.submit(r)
+    eng.run()
+    tight = ServeEngine(cfg, params, batch_size=2, max_len=32,
+                        backend="paged", block_size=4, num_blocks=7,
+                        prefix_cache=False, spec=SpecConfig(k=4))
+    reqs = mk()
+    for r in reqs:
+        tight.submit(r)
+    tight.run()
+    assert [r.out for r in reqs] == [r.out for r in ref]
+
+
+# ---------------------------------------------------------------------------
+# sampled (temperature > 0) speculation
+# ---------------------------------------------------------------------------
+
+
+def test_sampled_spec_matches_baseline_token_for_token():
+    """Exact-match acceptance draws each lane with the baseline sampler's
+    own key and filtered logits, so SAMPLED speculation (temperature,
+    top-k, top-p all active) must reproduce the non-speculative engine's
+    stream token-for-token — not merely in distribution (the marginal
+    math is additionally tested in tests/test_sampling.py)."""
+    sp = SamplingParams(temperature=1.0, top_k=20, top_p=0.9, seed=11)
+    _, base = _run("llama3-8b", None, sampling=sp, **_PAGED)
+    eng, a = _run("llama3-8b", SpecConfig(k=4), sampling=sp, **_PAGED)
+    assert [r.out for r in a] == [r.out for r in base]
+    assert eng.spec_stats()["drafted"] > 0
+    # and reproducible run-to-run
+    _, b = _run("llama3-8b", SpecConfig(k=4), sampling=sp, **_PAGED)
+    assert [r.out for r in a] == [r.out for r in b]
+
+
+# ---------------------------------------------------------------------------
+# zero recompiles under churn
+# ---------------------------------------------------------------------------
+
+
+def test_spec_zero_recompiles_under_churn():
+    cfg, params = _setup("llama3-8b")
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                      backend="paged", block_size=8, spec=SpecConfig(k=4))
+    eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=6))
+    eng.run()
+    sizes = eng.jit_cache_sizes()
+    reqs = [
+        Request(prompt=[1, 2, 3] + list(range(i + 4)), max_new_tokens=2 + i)
+        for i in range(5)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert eng.jit_cache_sizes() == sizes, (
+        f"spec programs recompiled: {sizes} -> {eng.jit_cache_sizes()}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# drafter
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_drafter_prompt_lookup():
+    d = NgramDrafter(max_n=3, min_n=1)
+    # trailing [1,2,3] matched earlier; proposes the continuation
+    assert d.propose([1, 2, 3, 9, 9, 1, 2, 3], 3) == [9, 9, 1]
+    # recency: the MOST RECENT earlier occurrence wins
+    assert d.propose([1, 2, 5, 1, 2, 7, 1, 2], 1) == [7]
+    # falls back to shorter n-grams; the most recent [4] is at index 1
+    assert d.propose([4, 4, 9, 7, 4], 2) == [9, 7]
+    # nothing to match
+    assert d.propose([1, 2, 3], 4) == []
+    assert d.propose([], 4) == []
+    assert d.propose([1, 2, 3, 1], 0) == []
+
+
+# ---------------------------------------------------------------------------
+# generated-token prefix caching (ROADMAP follow-up)
+# ---------------------------------------------------------------------------
+
+
+def test_cache_generated_hits_past_prompt_boundary():
+    """With cache_generated on, a follow-up request whose prompt extends a
+    completed request's prompt+output must get prefix hits PAST the
+    original prompt boundary — and still produce the cold stream."""
+    cfg, params = _setup("llama3-8b")
+    prompt = list(range(100, 116))  # 16 tokens = 2 full 8-token blocks
+    eng = ServeEngine(cfg, params, batch_size=1, max_len=64,
+                      backend="paged", block_size=8, prefill_chunk=8,
+                      cache_generated=True)
+    first = Request(prompt=list(prompt), max_new_tokens=10)
+    eng.submit(first)
+    eng.run()
+    # multi-turn continuation: prompt2 = prompt + output + new user turn
+    followup = prompt + first.out + [7, 8]
+    eng.submit(Request(prompt=list(followup), max_new_tokens=2))
+    eng._admit()
+    (entry,) = eng.sched.live.values()
+    # matched blocks cover more than the original prompt: hits past the
+    # boundary (16 prompt tokens + at least one full generated block)
+    assert entry.start_pos > len(prompt)
+    eng.run()
+
+    # correctness: same follow-up on a cold engine matches
+    cold = ServeEngine(cfg, params, batch_size=1, max_len=64,
+                       backend="paged", block_size=8)
+    warm_out = None
+    for e2 in (eng, cold):
+        r = Request(prompt=list(followup), max_new_tokens=6)
+        e2.submit(r)
+        e2.run()
+        if warm_out is None:
+            warm_out = r.out
+        else:
+            assert r.out == warm_out
+
+
+def test_cache_generated_off_by_default():
+    cfg, params = _setup("llama3-8b")
+    eng = ServeEngine(cfg, params, batch_size=1, max_len=64,
+                      backend="paged", block_size=8, prefill_chunk=8)
+    first = Request(prompt=list(range(100, 116)), max_new_tokens=10)
+    eng.submit(first)
+    eng.run()
+    followup = first.prompt + first.out + [7]
+    eng.submit(Request(prompt=list(followup), max_new_tokens=2))
+    eng._admit()
+    (entry,) = eng.sched.live.values()
+    assert entry.start_pos <= len(first.prompt)
+    eng.run()
