@@ -29,6 +29,13 @@ saturated trace: greedy parity asserted, acceptance rate and decode
 model-calls-per-token reported (< 1.0 gated off-smoke — speculation must
 win arithmetically; the wall-clock gate arms only off-interpret).
 
+A fifth phase drives a multi-tenant OVERLOAD trace (interactive
+requests with tight TTFT deadlines + batch requests, bursty arrivals
+over budget) through the asyncio front end (serve/server.py): load-shed
+rate, deadline-miss rate and queue-time percentiles are reported and
+the block pool is asserted leak-free afterwards — the CI chaos-smoke
+job greps these counters.
+
 Emits `name,us_per_call,derived` rows (benchmarks/common.py contract),
 a human-readable summary, AND machine-readable ``BENCH_serve.json`` at
 the repo root. The JSON keeps the latest-run summary at the top level
@@ -386,6 +393,99 @@ def bench_prefix_cache(cfg, params, batch, max_len, n_warm: int):
     }
 
 
+def bench_async_overload(cfg, params, batch, max_len, block_size,
+                         smoke: bool):
+    """Multi-tenant OVERLOAD trace through the asyncio front end
+    (serve/server.py): a Poisson burst of interactive requests (tight
+    TTFT deadlines) and batch requests (no deadline) deliberately
+    exceeds the queue + memory budget, so admission control MUST shed
+    and deadlines MUST miss — the CI chaos-smoke job asserts both
+    counters are nonzero and that the pool ends leak-free."""
+    import asyncio
+
+    from repro.serve import (
+        AsyncServer,
+        Request as _Req,
+        ServerConfig,
+        ShedError,
+        assert_leak_free,
+    )
+
+    n = 12 if smoke else 48
+    rng = np.random.RandomState(11)
+    eng = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                      backend="paged", block_size=block_size,
+                      prefix_cache=False)
+    eng.submit(_Req(prompt=[1, 2, 3], max_new_tokens=2))
+    eng.run()  # compile warmup outside the measured window
+    # Trace built up front (deterministic): bursty sub-ms arrivals into
+    # a queue bounded well under the burst size.
+    trace = []
+    for i in range(n):
+        arrive = float(rng.exponential(0.002))
+        plen = int(rng.randint(4, 17))
+        prompt = [int(x) for x in rng.randint(1, 200, size=plen)]
+        if i % 2 == 0:  # interactive tenant: tight TTFT deadline
+            # every 4th is already hopeless (0 budget) — a guaranteed,
+            # environment-independent deadline miss for the CI gate
+            ttft = 0.0 if i % 4 == 0 else 0.25
+            trace.append((arrive, prompt, int(rng.randint(2, 7)), ttft))
+        else:  # batch tenant: long budget, no deadline
+            trace.append((arrive, prompt, int(rng.randint(8, 25)), None))
+    scfg = ServerConfig(max_queue=max(2, batch), max_retries=1,
+                        retry_backoff_s=0.005, max_demand_factor=1.5)
+
+    async def client(srv, spec):
+        arrive, prompt, max_new, ttft = spec
+        await asyncio.sleep(arrive)
+        try:
+            return await srv.complete(prompt, max_new_tokens=max_new,
+                                      ttft_deadline_s=ttft)
+        except ShedError:
+            return None
+
+    async def drive():
+        async with AsyncServer(eng, scfg) as srv:
+            done = await asyncio.gather(
+                *(client(srv, s) for s in trace))
+            return done, srv.snapshot()
+
+    t0 = time.perf_counter()
+    done, snap = asyncio.run(drive())
+    makespan = time.perf_counter() - t0
+    assert_leak_free(eng)  # overload must not leak a single block
+    sheds = snap.get("sheds", 0)
+    misses = (snap.get("deadline_misses_ttft", 0)
+              + snap.get("deadline_misses_total", 0))
+    completed = snap.get("completed", 0)
+    shed_rate = sheds / n
+    miss_rate = misses / n
+    print(f"async-serve   {n} req in {makespan:5.2f}s: {completed} "
+          f"completed, {sheds} shed ({shed_rate:.2f}), {misses} "
+          f"deadline-missed ({miss_rate:.2f}) | pool leak-free | "
+          f"queue_time p99 "
+          f"{snap.get('queue_time_s', {}).get('p99', 0.0) * 1e3:.1f}ms")
+    emit("serve_async_shed_rate", max(shed_rate, 1e-9) * 1e6,
+         f"{sheds}/{n} under overload")
+    emit("serve_async_deadline_miss_rate", max(miss_rate, 1e-9) * 1e6,
+         f"{misses}/{n} under overload")
+    return {
+        "requests": n,
+        "completed": int(completed),
+        "sheds": int(sheds),
+        "shed_rate": float(shed_rate),
+        "deadline_misses": int(misses),
+        "deadline_miss_rate": float(miss_rate),
+        "cancellations": int(snap.get("cancellations", 0)),
+        "watchdog_stalls": int(snap.get("watchdog_stalls", 0)),
+        "queue_time_p99_s": float(
+            snap.get("queue_time_s", {}).get("p99", 0.0)),
+        "ttft_p50_s": float(snap.get("ttft_s", {}).get("p50", 0.0)),
+        "makespan_s": float(makespan),
+        "leak_free": True,
+    }
+
+
 def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
               rate=8.0, smoke=False, block_size=16, num_blocks=None):
     cfg = reduced(get_config(arch))
@@ -456,6 +556,8 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
         cfg, params, batch, max_len, block_size,
         budget=16 if smoke else max(24, max_len - 32),
     )
+    overload = bench_async_overload(cfg, params, batch, max_len,
+                                    block_size, smoke)
 
     speedup = results["continuous"]["tok_s"] / max(
         results["wave"]["tok_s"], 1e-9
@@ -483,11 +585,13 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
         "max_len": max_len,
         "rate_req_s": rate,
         "block_size": block_size,
+        "num_blocks": num_blocks,
         "smoke": smoke,
         "engines": results,
         "prefix_cache": prefix,
         "paged_attention_kernel": paged_kernel,
         "spec_decode": spec,
+        "async_overload": overload,
         "continuous_over_wave_tok_s": float(speedup),
         "paged_over_contiguous_peak_cache": float(mem_ratio),
     }
@@ -506,6 +610,11 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
     history.append({
         "rev": _git_rev(),
         "date": time.strftime("%Y-%m-%d %H:%M:%S", time.gmtime()),
+        # Engine config: perf numbers are meaningless across history
+        # rows without the pool geometry they ran under.
+        "block_size": block_size,
+        "num_blocks": num_blocks,
+        "max_batch": batch,
         "continuous_tok_s": round(results["continuous"]["tok_s"], 1),
         "paged_tok_s": round(results["paged"]["tok_s"], 1),
         "latency_p50_s": round(results["paged"]["latency_p50_s"], 4),
@@ -516,6 +625,8 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
         "spec_calls_per_token": (
             round(spec["decode_calls_per_token_spec"], 3) if spec else None
         ),
+        "shed_rate": round(overload["shed_rate"], 3),
+        "deadline_miss_rate": round(overload["deadline_miss_rate"], 3),
     })
     payload["history"] = history
     with open(json_path, "w") as f:
@@ -564,6 +675,15 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
                     f"spec decode {spec['decode_tok_s_spec']:.1f} tok/s < "
                     f"plain {spec['decode_tok_s_plain']:.1f}"
                 )
+        # The overload phase is only meaningful if it actually
+        # overloaded: zero sheds or zero deadline misses means the
+        # burst fit the budget and nothing was exercised.
+        if overload["sheds"] == 0 or overload["deadline_misses"] == 0:
+            raise SystemExit(
+                f"async overload phase failed to overload "
+                f"(sheds={overload['sheds']}, "
+                f"deadline_misses={overload['deadline_misses']})"
+            )
     return payload
 
 

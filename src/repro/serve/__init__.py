@@ -11,6 +11,10 @@ Layering (docs/serving.md has the full design):
   spec_decode   — speculative decoding: n-gram self-drafting + (B, k+1)
                   verify + rejection-sampling accept with exact rollback
   engine        — ServeEngine (continuous) / WaveEngine (lockstep baseline)
+  server        — AsyncServer: asyncio front end (deadlines, cancellation,
+                  load shedding, retry-with-backoff, token streaming)
+  metrics       — ServeMetrics counter/series surface + stuck-step Watchdog
+  faults        — seeded fault injection + chaos harness (CI chaos-smoke)
 """
 from .block_manager import (  # noqa: F401
     BlockManager,
@@ -32,6 +36,19 @@ from .engine import (  # noqa: F401
     make_prefill_chunk_step,
     make_prefill_step,
 )
+from .faults import (  # noqa: F401
+    FaultInjector,
+    FlakyDrafter,
+    GarbageDrafter,
+    assert_leak_free,
+    pool_snapshot,
+    run_chaos,
+)
+from .metrics import (  # noqa: F401
+    ServeMetrics,
+    Watchdog,
+    collect_engine_metrics,
+)
 from .prefix_cache import RadixPrefixCache  # noqa: F401
 from .programs import (  # noqa: F401
     make_decode_step_paged,
@@ -46,7 +63,17 @@ from .sampling import (  # noqa: F401
     spec_accept_tokens,
     stack_params,
 )
-from .scheduler import Request, Scheduler, SlotEntry  # noqa: F401
+from .scheduler import (  # noqa: F401
+    QueueFull,
+    Request,
+    Scheduler,
+    SlotEntry,
+)
+from .server import (  # noqa: F401
+    AsyncServer,
+    ServerConfig,
+    ShedError,
+)
 from .spec_decode import (  # noqa: F401
     Drafter,
     NgramDrafter,

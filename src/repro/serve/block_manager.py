@@ -199,7 +199,12 @@ class PagedBackend(CacheBackend):
         # streamed from the pool in place); use_kernel=False keeps the jnp
         # row-view gather — the bit-exact oracle the kernel is tested
         # against. Chunked prefill always takes the gather path (S > 1).
+        # A kernel failure at dispatch degrades PERMANENTLY to the gather
+        # oracle (`_kernel_fallback`) instead of taking serving down;
+        # `kernel_fallbacks` counts the degradations for the metrics
+        # surface.
         self.use_kernel = use_kernel
+        self.kernel_fallbacks = 0
         self._prefill_chunk = jax.jit(
             make_prefill_chunk_paged(cfg), donate_argnums=(1, 2)
         )
@@ -360,20 +365,59 @@ class PagedBackend(CacheBackend):
             self._touch_live_hw()  # divergence: one more unique block
         return True
 
+    def _kernel_fallback(self):
+        """Graceful degradation: a Pallas kernel failure (compile or
+        dispatch) rebuilds BOTH multi-token programs on the jnp gather
+        oracle and turns the kernel off for the backend's lifetime. The
+        gather path is bit-exact, so serving continues unchanged — only
+        the decode HBM saving is lost. Safe to invoke at trace/compile
+        failure time: the cache pytree is only replaced on a successful
+        call, and buffer donation cannot have consumed it before the
+        program ever ran."""
+        from .programs import make_decode_step_paged, make_verify_step_paged
+
+        assert self.use_kernel, "fallback with the kernel already off"
+        self.use_kernel = False
+        self.kernel_fallbacks += 1
+        self._decode = jax.jit(
+            make_decode_step_paged(self.cfg, use_kernel=False),
+            donate_argnums=(4,),
+        )
+        self._verify = jax.jit(
+            make_verify_step_paged(self.cfg, use_kernel=False),
+            donate_argnums=(4,),
+        )
+
     def decode(self, params, toks, pos):
         if self._tables_dev is None:
             self._tables_dev = jnp.asarray(self.tables)
-        logits, self.cache = self._decode(
-            params, toks, pos, self._tables_dev, self.cache
-        )
+        try:
+            logits, self.cache = self._decode(
+                params, toks, pos, self._tables_dev, self.cache
+            )
+        except Exception:
+            if not self.use_kernel:
+                raise
+            self._kernel_fallback()
+            logits, self.cache = self._decode(
+                params, toks, pos, self._tables_dev, self.cache
+            )
         return logits
 
     def verify(self, params, toks, poss):
         if self._tables_dev is None:
             self._tables_dev = jnp.asarray(self.tables)
-        logits, self.cache = self._verify(
-            params, toks, poss, self._tables_dev, self.cache
-        )
+        try:
+            logits, self.cache = self._verify(
+                params, toks, poss, self._tables_dev, self.cache
+            )
+        except Exception:
+            if not self.use_kernel:
+                raise
+            self._kernel_fallback()
+            logits, self.cache = self._verify(
+                params, toks, poss, self._tables_dev, self.cache
+            )
         return logits
 
     def invalidate_positions(self, positions):
@@ -423,6 +467,19 @@ class PagedBackend(CacheBackend):
         if self._clear_ssm is not None:
             sizes += (self._clear_ssm._cache_size(),)
         return sizes
+
+    def token_capacity(self) -> int:
+        return (self.num_blocks - 1) * self.block_size
+
+    def tokens_free(self) -> int:
+        """Token positions admission control can still promise: the free
+        list plus tree-retained blocks no live table references (those
+        are reclaimable via LRU eviction — counting them stops the
+        server shedding everything once the radix tree has warmed up to
+        pool capacity, which it does in any sustained run)."""
+        live = np.unique(self.tables[self.tables != 0]).size
+        reclaimable = max(0, self.mgr.num_used - int(live))
+        return (self.mgr.num_free + reclaimable) * self.block_size
 
     def bytes_per_block(self) -> int:
         per = 0

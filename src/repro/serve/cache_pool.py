@@ -193,6 +193,16 @@ class CacheBackend:
         """Release every resource `slot` holds."""
         raise NotImplementedError
 
+    def token_capacity(self) -> int:
+        """Total token positions the pool can ever hold (admission-
+        control budget denominator for serve/server.py load shedding)."""
+        raise NotImplementedError
+
+    def tokens_free(self) -> int:
+        """Token positions not currently promised to live work (includes
+        reclaimable prefix-cache blocks on the paged backend)."""
+        raise NotImplementedError
+
     def jit_cache_sizes(self) -> tuple:
         """Compiled-signature counts of the backend's device programs
         (frozen after warmup == zero recompiles)."""
@@ -274,6 +284,12 @@ class ContiguousBackend(CacheBackend):
 
     def retire(self, slot: int):
         self.pool.release(slot)
+
+    def token_capacity(self) -> int:
+        return self.num_slots * self.max_len
+
+    def tokens_free(self) -> int:
+        return self.pool.num_free * self.max_len
 
     def jit_cache_sizes(self) -> tuple:
         return (self._decode._cache_size(),

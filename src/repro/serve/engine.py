@@ -45,7 +45,12 @@ from .programs import (  # noqa: F401  (re-exported; launch/specs.py uses)
     make_prefill_chunk_step,
     make_prefill_step,
 )
-from .sampling import GREEDY, SamplingParams, sample_tokens
+from .sampling import (
+    GREEDY,
+    SamplingParams,
+    sample_tokens,
+    sample_tokens_checked,
+)
 from .scheduler import Request, Scheduler
 from .spec_decode import SpecConfig, SpecDecoder
 
@@ -71,6 +76,15 @@ class ServeEngine:
     ``cache_generated`` to also publish retired requests' generated
     tokens into the radix tree (multi-turn prefix reuse).
 
+    ``max_queue`` bounds the admission queue: `submit` raises
+    `scheduler.QueueFull` at capacity instead of buffering without limit
+    (the reject path serve/server.py builds load shedding on). The tick
+    loop enforces per-request deadlines (Request.ttft_deadline_s /
+    deadline_s -> finish_reason="deadline"), `cancel(req)` frees a
+    queued or live request's every resource within one tick, and rows
+    whose logits go non-finite retire with finish_reason="error" instead
+    of corrupting the batch.
+
     ``spec`` (a SpecConfig) turns on speculative decoding
     (serve/spec_decode.py): a self-drafting n-gram drafter proposes up to
     spec.k tokens per row and one batched (B, k+1) verify step commits an
@@ -87,7 +101,8 @@ class ServeEngine:
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  prefix_cache: bool = True, use_kernel: bool = True,
                  cache_generated: bool = False,
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None,
+                 max_queue: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -116,8 +131,12 @@ class ServeEngine:
             f"prefill_chunk {chunk} exceeds backend limit "
             f"{self.backend.max_chunk}"
         )
-        self.sched = Scheduler(chunk, max_len, eos_id)
-        self._sample = jax.jit(sample_tokens)
+        self.sched = Scheduler(chunk, max_len, eos_id, max_queue=max_queue)
+        # Sampler fused with the per-row non-finite guard: one program
+        # returns (tokens, ok); rows whose logits carry NaN/inf are
+        # retired with finish_reason="error" instead of committing a
+        # garbage token and corrupting the shared batch.
+        self._sample = jax.jit(sample_tokens_checked)
         # Per-slot logits of the *last* model call that touched the row —
         # valid iff the row is in DECODE state.
         self._logits = jnp.zeros((batch_size, cfg.vocab_size), jnp.float32)
@@ -129,6 +148,10 @@ class ServeEngine:
         self._step = np.zeros((batch_size,), np.int32)
         self.decode_steps = 0  # batched decode model calls (perf counter)
         self.preemptions = 0
+        # Robustness counters (serve/metrics.py collects these).
+        self.cancellations = 0
+        self.nonfinite_retired = 0
+        self.deadline_misses = {"ttft": 0, "total": 0}
         # Speculative decoding: SpecDecoder validates arch/backend support
         # (rollbackable cache) and owns drafting/verify/accept state.
         self._spec = SpecDecoder(self, spec) if spec is not None else None
@@ -209,6 +232,63 @@ class ServeEngine:
             self._spec.drop_slot(entry.slot)
         self._admission_hold = False
 
+    def _abort_entry(self, entry, reason: str):
+        """Abnormal retirement (cancellation / deadline / poisoned row):
+        release EVERYTHING the row holds — slot, blocks, pending
+        speculative state — in the same tick, without publishing any of
+        its (possibly partial or poisoned) state to the prefix cache."""
+        self.sched.finish(entry, reason)
+        self.backend.retire(entry.slot)
+        if self._spec is not None:
+            self._spec.drop_slot(entry.slot)
+        self._admission_hold = False
+
+    def cancel(self, req: Request, reason: str = "cancelled") -> bool:
+        """Cancel a request wherever it is: queued (dropped before it
+        ever binds memory) or live (the row retires and its slot/blocks/
+        pending-spec state free immediately — within the tick the cancel
+        lands in). Returns False if the request already finished (its
+        output stands; cancellation lost the race)."""
+        if req.done:
+            return False
+        if self.sched.drop_queued(req, reason):
+            self.cancellations += 1
+            return True
+        entry = self.sched.entry_for(req)
+        if entry is None:
+            return False
+        self._abort_entry(entry, reason)
+        self.cancellations += 1
+        return True
+
+    @staticmethod
+    def _deadline_kind(req: Request, now: float) -> Optional[str]:
+        if (req.deadline_s is not None
+                and now - req.t_submit >= req.deadline_s):
+            return "total"
+        if (req.ttft_deadline_s is not None and req.t_first_token == 0.0
+                and now - req.t_submit >= req.ttft_deadline_s):
+            return "ttft"
+        return None
+
+    def _expire_deadlines(self):
+        """Tick-loop deadline enforcement: queued requests whose TTFT or
+        total deadline already passed never bind memory; live rows are
+        aborted and their resources free this same tick."""
+        now = time.perf_counter()
+        for req in [r for r in self.sched.queue
+                    if r.ttft_deadline_s is not None
+                    or r.deadline_s is not None]:
+            kind = self._deadline_kind(req, now)
+            if kind is not None:
+                self.sched.drop_queued(req, "deadline")
+                self.deadline_misses[kind] += 1
+        for entry in list(self.sched.live.values()):
+            kind = self._deadline_kind(entry.req, now)
+            if kind is not None:
+                self._abort_entry(entry, "deadline")
+                self.deadline_misses[kind] += 1
+
     def _do_decode(self) -> int:
         """Sample every DECODE row from the logits buffer, retire finished
         rows, then one batched decode step for the survivors. Returns the
@@ -220,15 +300,23 @@ class ServeEngine:
         entries = self.sched.decode_entries()
         if not entries:
             return 0
-        toks = np.asarray(self._sample(
+        toks, ok = self._sample(
             self._logits, self._temp, self._top_k, self._top_p,
             self._seed, self._step,
-        ))
+        )
+        toks, ok = np.asarray(toks), np.asarray(ok)
         in_toks = np.full((self.batch, 1), self.pad_id, np.int32)
         in_pos = np.full((self.batch,), -1, np.int32)
         emitted = 0
         survivors = []
         for e in entries:
+            if not ok[e.slot]:
+                # Poisoned logits (NaN/inf escaped the model): retire the
+                # row instead of committing a garbage token — the other
+                # rows' streams are untouched.
+                self._abort_entry(e, "error")
+                self.nonfinite_retired += 1
+                continue
             tok = int(toks[e.slot])
             self._step[e.slot] += 1
             emitted += 1
@@ -251,8 +339,10 @@ class ServeEngine:
         return emitted
 
     def step(self) -> int:
-        """One engine tick: admit, (maybe) one prefill chunk, one batched
-        sample+decode pass. Returns tokens emitted this tick."""
+        """One engine tick: expire deadlines, admit, (maybe) one prefill
+        chunk, one batched sample+decode pass. Returns tokens emitted
+        this tick."""
+        self._expire_deadlines()
         self._admit()
         self._do_prefill_chunk()
         return self._do_decode()
@@ -274,6 +364,23 @@ class ServeEngine:
         if self._spec is not None:
             sizes += (self._spec._accept._cache_size(),)
         return sizes
+
+    def robustness_stats(self) -> dict:
+        """Degradation/termination counters (serve/metrics.py merges
+        these into the server's metric snapshot)."""
+        out = {
+            "preemptions": self.preemptions,
+            "cancellations": self.cancellations,
+            "nonfinite_retired": self.nonfinite_retired,
+            "deadline_misses_ttft": self.deadline_misses["ttft"],
+            "deadline_misses_total": self.deadline_misses["total"],
+            "kernel_fallbacks": getattr(self.backend,
+                                        "kernel_fallbacks", 0),
+        }
+        if self._spec is not None:
+            out["spec_rows_disabled"] = self._spec.rows_disabled
+            out["spec_drafter_errors"] = self._spec.drafter_errors
+        return out
 
     def spec_stats(self) -> Optional[dict]:
         """Speculation counters (None when speculation is off)."""

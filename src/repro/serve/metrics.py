@@ -1,0 +1,121 @@
+"""Per-request serving metrics + stuck-step watchdog.
+
+``ServeMetrics`` is a deliberately tiny counter/series surface — pure
+host-side python, no jax — shared by the async front end
+(serve/server.py), the fault harness (serve/faults.py), and the bench
+(benchmarks/bench_serve.py, which exports a snapshot into
+``BENCH_serve.json``). Counters are monotonic ints; series collect raw
+float observations (queue time, TTFT, total latency) and summarize to
+count/mean/p50/p99 at snapshot time.
+
+Canonical counter names (the failure-mode matrix in docs/serving.md maps
+each to a finish_reason / degradation):
+
+    submitted, completed, sheds, shed_queue_full, shed_memory,
+    shed_retries, cancellations, deadline_misses_ttft,
+    deadline_misses_total, errors_nonfinite, preemptions,
+    kernel_fallbacks, spec_rows_disabled, spec_drafter_errors,
+    watchdog_stalls
+
+``Watchdog`` detects a STUCK engine: work is pending but no token has
+been emitted (and no request has terminated) for longer than
+``stall_s``. It never kills anything itself — it raises a counter and
+invokes an optional callback, leaving policy to the operator. The server
+feeds it from its tick loop.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from typing import Callable, Dict, List, Optional
+
+
+def _percentile(sorted_vals: List[float], q: float) -> float:
+    """Nearest-rank percentile over an already-sorted list."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q / 100.0 * len(sorted_vals)))
+    return sorted_vals[idx]
+
+
+class ServeMetrics:
+    """Monotonic counters + raw-observation series with a dict snapshot."""
+
+    def __init__(self):
+        self.counters: Dict[str, int] = defaultdict(int)
+        self.series: Dict[str, List[float]] = defaultdict(list)
+
+    def inc(self, name: str, n: int = 1):
+        self.counters[name] += n
+
+    def observe(self, name: str, value: float):
+        self.series[name].append(float(value))
+
+    def count(self, name: str) -> int:
+        return self.counters.get(name, 0)
+
+    def merge_counters(self, other: Dict[str, int]):
+        """Adopt externally-owned counters (engine/backend/spec state) by
+        OVERWRITE, not add — those objects own their counts; this surface
+        just exports them."""
+        for k, v in other.items():
+            self.counters[k] = int(v)
+
+    def snapshot(self) -> dict:
+        out: dict = dict(sorted(self.counters.items()))
+        for name, vals in sorted(self.series.items()):
+            s = sorted(vals)
+            out[name] = {
+                "count": len(s),
+                "mean": sum(s) / len(s) if s else 0.0,
+                "p50": _percentile(s, 50),
+                "p99": _percentile(s, 99),
+            }
+        return out
+
+
+def collect_engine_metrics(engine, metrics: Optional[ServeMetrics] = None
+                           ) -> ServeMetrics:
+    """Merge a ServeEngine's robustness counters (preemptions, poisoned-
+    row retirements, deadline misses, kernel fallbacks, spec
+    degradations) into `metrics` (a fresh surface if None)."""
+    m = metrics if metrics is not None else ServeMetrics()
+    m.merge_counters(engine.robustness_stats())
+    return m
+
+
+class Watchdog:
+    """Stuck-step detection for the serving tick loop.
+
+    `beat(progressed, pending)` is called once per tick: ``progressed``
+    means the engine emitted a token or changed request state this tick;
+    ``pending`` means there is work that SHOULD be progressing. A stall
+    fires when pending work sees no progress for `stall_s` seconds —
+    a wedged device call, a scheduler livelock, a fault that ate a row.
+    Firing is edge-triggered (once per stall episode, rearmed by the
+    next progress) so a genuinely stuck engine does not spam."""
+
+    def __init__(self, stall_s: float = 30.0,
+                 on_stall: Optional[Callable[[float], None]] = None):
+        assert stall_s > 0
+        self.stall_s = stall_s
+        self.on_stall = on_stall
+        self.stalls = 0
+        self._last_progress = time.perf_counter()
+        self._armed = True
+
+    def beat(self, progressed: bool, pending: bool) -> bool:
+        """Returns True iff a stall fired on this beat."""
+        now = time.perf_counter()
+        if progressed or not pending:
+            self._last_progress = now
+            self._armed = True
+            return False
+        stalled_for = now - self._last_progress
+        if self._armed and stalled_for >= self.stall_s:
+            self.stalls += 1
+            self._armed = False  # edge-triggered: rearm on next progress
+            if self.on_stall is not None:
+                self.on_stall(stalled_for)
+            return True
+        return False

@@ -93,10 +93,41 @@ def _filtered_logits(logits, temperature, top_k, top_p):
     """Temperature-scaled logits with the top-k mask and (renormalized)
     nucleus mask applied sequentially — the distribution every sampled row
     draws from. logits: (B, V) f32; params (B,). Returns (B, V) with
-    filtered lanes at -inf."""
+    filtered lanes at -inf.
+
+    Non-finite input lanes (NaN / +-inf from a poisoned model step) are
+    coerced to -inf BEFORE filtering: NaNs poison every comparison the
+    masks are built from, and a single +inf lane makes softmax emit NaNs
+    for the whole row. The coercion keeps the masks well-defined; rows
+    left without any finite lane are the caller's problem (see
+    `guard_support` / `finite_rows`)."""
     scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = jnp.where(jnp.isfinite(scaled), scaled, -jnp.inf)
     after_k = jnp.where(_topk_mask(scaled, top_k), scaled, -jnp.inf)
     return jnp.where(_topp_mask(after_k, top_p), after_k, -jnp.inf)
+
+
+def guard_support(masked):
+    """Defense against fully-masked rows: `jax.random.categorical` over an
+    all--inf row is UNDEFINED (uniform over NaN weights), and argmax over
+    one silently returns lane 0. Returns ``(guarded, support)`` where
+    ``support[b]`` is True iff row b kept at least one finite lane, and
+    rows without support are replaced by zeros (a uniform, *defined*
+    distribution) so the draw can never propagate NaN. Callers must treat
+    ``support=False`` rows as poisoned — the engine retires them with
+    finish_reason="error" instead of committing their token."""
+    support = jnp.isfinite(masked).any(axis=-1)
+    return jnp.where(support[..., None], masked, 0.0), support
+
+
+def finite_rows(logits):
+    """(B, ...) -> (B,) bool: True iff every logit of the row is finite.
+    The engine's per-tick health check — a False row is poisoned (NaN/inf
+    escaped the model) and gets retired with finish_reason="error" before
+    its token can corrupt the stream."""
+    return jnp.isfinite(logits).all(
+        axis=tuple(range(1, logits.ndim))
+    )
 
 
 def sample_tokens(logits, temperature, top_k, top_p, seed, step):
@@ -106,9 +137,13 @@ def sample_tokens(logits, temperature, top_k, top_p, seed, step):
     fold_in(PRNGKey(seed_i), step_i) — batch-composition independent.
     """
     logits = logits.astype(jnp.float32)
-    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    greedy_tok = jnp.argmax(
+        jnp.where(jnp.isfinite(logits), logits, -jnp.inf), axis=-1
+    ).astype(jnp.int32)
 
-    masked = _filtered_logits(logits, temperature, top_k, top_p)
+    masked, _ = guard_support(
+        _filtered_logits(logits, temperature, top_k, top_p)
+    )
 
     keys = jax.vmap(
         lambda s, t: jax.random.fold_in(jax.random.PRNGKey(s), t)
@@ -116,6 +151,19 @@ def sample_tokens(logits, temperature, top_k, top_p, seed, step):
     sampled = jax.vmap(jax.random.categorical)(keys, masked).astype(jnp.int32)
 
     return jnp.where(temperature > 0.0, sampled, greedy_tok)
+
+
+def sample_tokens_checked(logits, temperature, top_k, top_p, seed, step):
+    """`sample_tokens` fused with the per-row health check: returns
+    ``(tokens, ok)`` where ``ok[b]`` is False iff row b's raw logits
+    carry any non-finite value. Tokens of not-ok rows are defined (the
+    support guard makes the draw total) but MEANINGLESS — the engine
+    retires those rows with finish_reason="error" and never commits
+    them. One jitted program so the guard costs no extra device sync."""
+    return (
+        sample_tokens(logits, temperature, top_k, top_p, seed, step),
+        finite_rows(logits),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -158,14 +206,17 @@ def spec_accept_tokens(logits, drafts, n_draft, temperature, top_k, top_p,
     b, k1, v = logits.shape
     k = k1 - 1
     logits = logits.astype(jnp.float32)
-    greedy_chain = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B,K+1)
+    greedy_chain = jnp.argmax(
+        jnp.where(jnp.isfinite(logits), logits, -jnp.inf), axis=-1
+    ).astype(jnp.int32)  # (B, K+1)
 
     flat = logits.reshape(b * k1, v)
-    masked = _filtered_logits(
+    masked, _ = guard_support(_filtered_logits(
         flat,
         jnp.repeat(temperature, k1), jnp.repeat(top_k, k1),
         jnp.repeat(top_p, k1),
-    ).reshape(b, k1, v)
+    ))
+    masked = masked.reshape(b, k1, v)
 
     def row_keys(s, t):
         return jax.vmap(

@@ -17,6 +17,15 @@ drives one `Scheduler` through ticks:
 * Retirement is immediate: the tick a row samples EOS (or hits its token
   budget / the cache ceiling) it is released, and the next queued request
   can be admitted into that slot on the same tick's admission pass.
+* The queue is BOUNDED (``max_queue``): `submit` raises `QueueFull`
+  instead of buffering without limit — the reject path load shedding
+  (serve/server.py) is built on. Preemption requeues bypass the bound
+  (admitted work is never lost to it).
+* Abnormal termination is first-class: `finish(entry, reason)` retires a
+  live row with finish_reason "cancelled" / "deadline" / "error" and
+  `drop_queued` removes a request that never got memory — both leave the
+  state machine exactly as a normal retirement does (the caller releases
+  backend resources, as with any retirement).
 """
 from __future__ import annotations
 
@@ -26,6 +35,10 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from .sampling import GREEDY, SamplingParams
+
+
+class QueueFull(RuntimeError):
+    """submit() on a scheduler whose bounded queue is at capacity."""
 
 
 @dataclass
@@ -44,10 +57,24 @@ class Request:
     # Why generation stopped: "eos" (sampled the stop token), "length"
     # (max_new_tokens reached), or "cache_ceiling" (prompt+generation hit
     # the engine's max_len — a truncation, NOT a normal completion; the
-    # bench and examples report it separately). None while running.
+    # bench and examples report it separately). Abnormal terminals:
+    # "cancelled" (client cancellation), "deadline" (TTFT/total deadline
+    # expired), "shed" (admission control rejected it), "error" (the row
+    # produced non-finite logits and was retired to protect the batch).
+    # None while running.
     finish_reason: Optional[str] = None
+    # Deadlines, in seconds RELATIVE to t_submit (None = none). The
+    # engine's tick loop expires them: ttft_deadline_s while no token has
+    # been delivered, deadline_s against total residency — queued or
+    # live, the request finishes with finish_reason="deadline" and every
+    # resource it held is released that same tick.
+    ttft_deadline_s: Optional[float] = None
+    deadline_s: Optional[float] = None
     on_token: Optional[Callable[["Request", int], None]] = None
     t_submit: float = 0.0
+    # First bind to a slot (queue time = t_admitted - t_submit); a
+    # preemption retry keeps the ORIGINAL admission time.
+    t_admitted: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
     # Set after a preemption: the retry must not pin prefix-cache blocks,
@@ -112,17 +139,24 @@ class SlotEntry:
 
 class Scheduler:
     def __init__(self, prefill_chunk: int, max_len: int,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 max_queue: Optional[int] = None):
         assert prefill_chunk >= 1
+        assert max_queue is None or max_queue >= 1
         self.prefill_chunk = prefill_chunk
         self.max_len = max_len
         self.eos_id = eos_id
+        self.max_queue = max_queue
         self.queue: deque = deque()
         self.live: Dict[int, SlotEntry] = {}
 
     # -- admission ---------------------------------------------------------
 
     def submit(self, req: Request):
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            raise QueueFull(
+                f"admission queue at capacity ({self.max_queue})"
+            )
         req.t_submit = time.perf_counter()
         self.queue.append(req)
 
@@ -143,6 +177,8 @@ class Scheduler:
         ``start_pos`` > 0, prefill covers only prompt[start_pos:] — the
         prefix-cache hit path."""
         req = self.queue.popleft()
+        if req.t_admitted == 0.0:
+            req.t_admitted = time.perf_counter()
         p = len(req.prompt)
         assert p >= 1, "empty prompt"
         assert 0 <= start_pos < p, "must re-run at least the last token"
@@ -182,6 +218,40 @@ class Scheduler:
 
     def decode_entries(self) -> List[SlotEntry]:
         return [e for e in self.live.values() if e.state == DECODE]
+
+    # -- abnormal termination ----------------------------------------------
+
+    def finish(self, entry: SlotEntry, reason: str):
+        """Retire a LIVE row without a final token: cancellation, deadline
+        expiry, or a poisoned-row error. Leaves the state machine exactly
+        as `record_token` retirement does — the caller must release the
+        slot's backend resources, same as any retirement."""
+        req = entry.req
+        req.done = True
+        req.finish_reason = reason
+        req.t_done = time.perf_counter()
+        del self.live[entry.slot]
+        entry.state = FREE
+
+    def drop_queued(self, req: Request, reason: str) -> bool:
+        """Finish a request that is still QUEUED (never bound to memory):
+        deadline expiry before admission, or an explicit cancellation.
+        Returns False if `req` is not in the queue."""
+        try:
+            self.queue.remove(req)
+        except ValueError:
+            return False
+        req.done = True
+        req.finish_reason = reason
+        req.t_done = time.perf_counter()
+        return True
+
+    def entry_for(self, req: Request) -> Optional[SlotEntry]:
+        """The live slot entry serving `req`, if any."""
+        for e in self.live.values():
+            if e.req is req:
+                return e
+        return None
 
     # -- retirement --------------------------------------------------------
 

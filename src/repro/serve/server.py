@@ -1,0 +1,354 @@
+"""Fault-tolerant asyncio serving front end over ``ServeEngine``.
+
+``AsyncServer`` wraps a (synchronous, single-threaded) ``ServeEngine``
+in an asyncio event loop without changing a single token it produces:
+requests enter the engine through the same FIFO ``submit`` path, the
+engine steps inside one pump task (jax stays on one thread), and tokens
+stream out through per-request ``asyncio.Queue``s fed by the engine's
+``on_token`` callback. On a no-fault trace the server's outputs are
+token-for-token identical to driving the engine directly — asserted for
+greedy AND sampled requests in tests/test_server.py.
+
+What the wrapper adds is the failure policy the bare engine doesn't
+have:
+
+* **Admission control + load shedding.** Before a request reaches the
+  engine, two budgets gate it: the scheduler's bounded queue
+  (``QueueFull`` -> shed reason "queue_full") and estimated token
+  demand — the sum of ``len(prompt) + max_new_tokens`` over every
+  queued and live request may not exceed ``max_demand_factor`` × the
+  backend's ``token_capacity()`` (shed reason "memory"). A shed is an
+  explicit, reasoned reject (``ShedError``), never a silent drop.
+* **Retry with backoff.** A shed submission retries up to
+  ``max_retries`` times with exponential backoff before the request is
+  finalized with ``finish_reason="shed"``; retries respect the
+  request's deadline (no point backing off past it).
+* **Deadlines.** Per-request TTFT / total deadlines ride on the
+  Request fields the engine's tick loop already enforces
+  (finish_reason="deadline"); the server just fills defaults and
+  surfaces the misses as metrics.
+* **Cancellation.** Closing a ``stream()``/``generate()`` consumer (or
+  calling ``cancel(req)``) retires the row and frees its slot, blocks,
+  and pending speculative state within one engine tick — the engine's
+  synchronous ``cancel`` does the freeing; the server just routes it.
+* **Watchdog.** The pump feeds a stuck-step ``Watchdog``
+  (serve/metrics.py): pending work with no progress for ``stall_s``
+  raises the ``watchdog_stalls`` counter.
+
+The pump never lets an engine exception kill streams silently: a
+crashed pump finalizes every open request with finish_reason="error"
+and wakes its consumers.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from dataclasses import dataclass
+from typing import AsyncIterator, Dict, List, Optional
+
+from .metrics import ServeMetrics, Watchdog, collect_engine_metrics
+from .sampling import GREEDY, SamplingParams
+from .scheduler import QueueFull, Request
+
+_DONE = object()  # per-request stream sentinel
+
+
+class ShedError(RuntimeError):
+    """Admission control rejected a request. ``reason`` is "queue_full"
+    (bounded scheduler queue at capacity) or "memory" (estimated token
+    demand over budget)."""
+
+    def __init__(self, reason: str):
+        super().__init__(f"request shed: {reason}")
+        self.reason = reason
+
+
+@dataclass
+class ServerConfig:
+    """Front-end policy knobs (the engine's own config is orthogonal).
+
+    ``max_queue`` is applied to the engine's scheduler if it doesn't
+    already bound its queue. ``max_demand_factor`` scales the memory
+    budget: outstanding token demand (queued + live) may reach that
+    multiple of ``backend.token_capacity()`` — above it, new work is
+    shed with reason "memory" rather than queued into unbounded wait.
+    """
+
+    max_queue: int = 32
+    max_demand_factor: float = 4.0
+    max_retries: int = 2
+    retry_backoff_s: float = 0.05
+    # Pump sleep when the engine has nothing to do (keeps the loop
+    # responsive to new submissions without spinning).
+    idle_sleep_s: float = 0.002
+    watchdog_stall_s: float = 30.0
+    # Defaults applied to requests that don't set their own deadlines
+    # (None = no deadline).
+    default_ttft_deadline_s: Optional[float] = None
+    default_deadline_s: Optional[float] = None
+
+
+class AsyncServer:
+    """Asyncio front end: submit/stream/cancel over one ``ServeEngine``.
+
+    Use as an async context manager (starts/stops the pump task)::
+
+        async with AsyncServer(engine) as srv:
+            async for tok in srv.generate([1, 2, 3], max_new_tokens=8):
+                ...
+
+    or ``start()`` / ``stop()`` explicitly. All methods must be called
+    from the event loop thread — the engine itself is never shared
+    across threads.
+    """
+
+    def __init__(self, engine, config: Optional[ServerConfig] = None,
+                 metrics: Optional[ServeMetrics] = None):
+        self.eng = engine
+        self.config = config or ServerConfig()
+        self.metrics = metrics or ServeMetrics()
+        self.watchdog = Watchdog(
+            self.config.watchdog_stall_s,
+            on_stall=lambda s: self.metrics.inc("watchdog_stalls"),
+        )
+        if self.eng.sched.max_queue is None:
+            self.eng.sched.max_queue = self.config.max_queue
+        # id(req) -> stream queue; Requests are mutable dataclasses
+        # (unhashable), and identity is exactly the lifetime we track.
+        self._streams: Dict[int, asyncio.Queue] = {}
+        self._open: Dict[int, Request] = {}
+        self._pump_task: Optional[asyncio.Task] = None
+        self._running = False
+        self._wake = asyncio.Event()  # submission -> pump wakes instantly
+
+    # -- lifecycle ---------------------------------------------------------
+
+    async def start(self):
+        assert self._pump_task is None, "server already started"
+        self._running = True
+        self._pump_task = asyncio.create_task(self._pump())
+
+    async def stop(self):
+        """Stop the pump; any still-open request is cancelled (its
+        resources free through the engine's normal cancel path)."""
+        self._running = False
+        self._wake.set()
+        if self._pump_task is not None:
+            await self._pump_task
+            self._pump_task = None
+        for req in list(self._open.values()):
+            self.eng.cancel(req)
+            self.metrics.inc("cancellations_shutdown")
+        self._finalize_done()
+
+    async def __aenter__(self):
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc):
+        await self.stop()
+
+    # -- admission ---------------------------------------------------------
+
+    def _outstanding_tokens(self) -> int:
+        sched = self.eng.sched
+        return (
+            sum(len(r.prompt) + r.max_new_tokens for r in sched.queue)
+            + sum(len(e.req.prompt) + e.req.max_new_tokens
+                  for e in sched.live.values())
+        )
+
+    def _try_submit(self, req: Request):
+        demand = len(req.prompt) + req.max_new_tokens
+        budget = (self.config.max_demand_factor
+                  * self.eng.backend.token_capacity())
+        if self._outstanding_tokens() + demand > budget:
+            raise ShedError("memory")
+        try:
+            self.eng.submit(req)
+        except QueueFull:
+            raise ShedError("queue_full") from None
+
+    def _register(self, req: Request) -> asyncio.Queue:
+        q: asyncio.Queue = asyncio.Queue()
+        self._streams[id(req)] = q
+        self._open[id(req)] = req
+
+        def on_token(r: Request, tok: int):
+            q.put_nowait(tok)
+
+        req.on_token = on_token
+        return q
+
+    def _finalize(self, req: Request):
+        """Close a request's stream (idempotent)."""
+        q = self._streams.pop(id(req), None)
+        self._open.pop(id(req), None)
+        if q is not None:
+            q.put_nowait(_DONE)
+
+    async def submit(self, prompt: List[int], max_new_tokens: int = 16,
+                     sampling: SamplingParams = GREEDY,
+                     ttft_deadline_s: Optional[float] = None,
+                     deadline_s: Optional[float] = None) -> Request:
+        """Admit a request (retrying sheds with backoff) and return it.
+        Raises ``ShedError`` — with the request finalized as
+        finish_reason="shed" — if every attempt was rejected."""
+        cfg = self.config
+        req = Request(
+            prompt=list(prompt), max_new_tokens=max_new_tokens,
+            sampling=sampling,
+            ttft_deadline_s=(ttft_deadline_s if ttft_deadline_s is not None
+                             else cfg.default_ttft_deadline_s),
+            deadline_s=(deadline_s if deadline_s is not None
+                        else cfg.default_deadline_s),
+        )
+        self._register(req)
+        t0 = time.perf_counter()
+        attempt = 0
+        while True:
+            try:
+                self._try_submit(req)
+                self.metrics.inc("submitted")
+                self._wake.set()
+                return req
+            except ShedError as e:
+                if attempt >= cfg.max_retries or self._past_deadline(req, t0):
+                    req.done = True
+                    req.finish_reason = "shed"
+                    req.t_done = time.perf_counter()
+                    self.metrics.inc("sheds")
+                    self.metrics.inc(f"shed_{e.reason}")
+                    self._finalize(req)
+                    raise
+                self.metrics.inc("shed_retries")
+                await asyncio.sleep(cfg.retry_backoff_s * (2 ** attempt))
+                attempt += 1
+
+    @staticmethod
+    def _past_deadline(req: Request, t0: float) -> bool:
+        if req.deadline_s is None:
+            return False
+        return time.perf_counter() - t0 >= req.deadline_s
+
+    # -- streaming ---------------------------------------------------------
+
+    async def stream(self, req: Request) -> AsyncIterator[int]:
+        """Yield `req`'s tokens as the engine emits them; ends when the
+        request reaches ANY terminal state. Abandoning the iterator
+        (break / task cancellation) cancels the request, freeing its
+        row within one engine tick."""
+        q = self._streams.get(id(req))
+        if q is None:  # already finalized — replay nothing
+            return
+        try:
+            while True:
+                item = await q.get()
+                if item is _DONE:
+                    return
+                yield item
+        finally:
+            if not req.done:
+                self.cancel(req)
+
+    async def generate(self, prompt: List[int], max_new_tokens: int = 16,
+                       sampling: SamplingParams = GREEDY,
+                       ttft_deadline_s: Optional[float] = None,
+                       deadline_s: Optional[float] = None
+                       ) -> AsyncIterator[int]:
+        """submit + stream in one call."""
+        req = await self.submit(
+            prompt, max_new_tokens=max_new_tokens, sampling=sampling,
+            ttft_deadline_s=ttft_deadline_s, deadline_s=deadline_s,
+        )
+        async for tok in self.stream(req):
+            yield tok
+
+    async def complete(self, prompt: List[int], max_new_tokens: int = 16,
+                       sampling: SamplingParams = GREEDY,
+                       ttft_deadline_s: Optional[float] = None,
+                       deadline_s: Optional[float] = None) -> Request:
+        """Non-streaming convenience: run to a terminal state, return
+        the finished Request (`.out`, `.finish_reason`)."""
+        req = await self.submit(
+            prompt, max_new_tokens=max_new_tokens, sampling=sampling,
+            ttft_deadline_s=ttft_deadline_s, deadline_s=deadline_s,
+        )
+        async for _ in self.stream(req):
+            pass
+        return req
+
+    def cancel(self, req: Request) -> bool:
+        """Client cancellation: frees the request's slot/blocks/pending
+        speculative state within one engine tick (immediately if live).
+        Safe to call at any time; False if it already finished."""
+        hit = self.eng.cancel(req)
+        if hit:
+            self.metrics.inc("client_cancellations")
+        self._finalize(req)
+        return hit
+
+    # -- pump --------------------------------------------------------------
+
+    def _finalize_done(self) -> int:
+        """Close streams of requests that reached a terminal state and
+        record their latency metrics. Returns how many closed."""
+        done = [r for r in self._open.values() if r.done]
+        for req in done:
+            reason = req.finish_reason or "unknown"
+            self.metrics.inc(f"finish_{reason}")
+            if reason in ("eos", "length", "cache_ceiling"):
+                self.metrics.inc("completed")
+            if req.t_admitted:
+                self.metrics.observe(
+                    "queue_time_s", req.t_admitted - req.t_submit)
+            if req.t_first_token:
+                self.metrics.observe(
+                    "ttft_s", req.t_first_token - req.t_submit)
+            if req.t_done:
+                self.metrics.observe(
+                    "latency_s", req.t_done - req.t_submit)
+            self._finalize(req)
+        return len(done)
+
+    async def _pump(self):
+        """The single engine-driving task: step while work is pending,
+        close finished streams, feed the watchdog, sleep when idle."""
+        try:
+            while self._running:
+                if self.eng.sched.pending():
+                    emitted = self.eng.step()
+                    closed = self._finalize_done()
+                    self.watchdog.beat(emitted > 0 or closed > 0,
+                                       self.eng.sched.pending())
+                    # Yield so submit()/cancel() callers interleave.
+                    await asyncio.sleep(0)
+                else:
+                    self._finalize_done()
+                    self.watchdog.beat(False, False)
+                    self._wake.clear()
+                    try:
+                        await asyncio.wait_for(
+                            self._wake.wait(), self.config.idle_sleep_s)
+                    except asyncio.TimeoutError:
+                        pass
+        except Exception:
+            # Engine crash: never strand consumers — every open request
+            # terminates with finish_reason="error" and its stream ends.
+            for req in list(self._open.values()):
+                if not req.done:
+                    req.done = True
+                    req.finish_reason = "error"
+                    req.t_done = time.perf_counter()
+                self.metrics.inc("finish_error")
+                self._finalize(req)
+            raise
+
+    # -- introspection -----------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Server metrics + engine robustness counters + watchdog, as
+        one flat dict (the bench exports this into BENCH_serve.json)."""
+        collect_engine_metrics(self.eng, self.metrics)
+        self.metrics.counters["watchdog_stalls"] = self.watchdog.stalls
+        return self.metrics.snapshot()

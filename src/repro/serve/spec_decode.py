@@ -56,7 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .sampling import spec_accept_tokens
+from .sampling import finite_rows, spec_accept_tokens
 
 
 class Drafter(Protocol):
@@ -103,12 +103,22 @@ class SpecConfig:
 
     ``k``: draft tokens per verify step (the verify program's fixed lane
     count is k+1). ``drafter``: any `Drafter`; None = NgramDrafter with
-    the given n-gram bounds."""
+    the given n-gram bounds.
+
+    Graceful degradation: a misbehaving drafter must never take the
+    engine down — it can only cost speed. ``disable_after_rejects``
+    consecutive fully-rejected bursts on one row turn drafting OFF for
+    that row (it keeps decoding correctly at one committed token per
+    verify, lane 0 only); ``max_drafter_errors`` drafter exceptions on a
+    row do the same. 0 disables either trigger. Per-row state resets
+    when the slot turns over to a new request."""
 
     k: int = 4
     ngram_max: int = 3
     ngram_min: int = 1
     drafter: Optional[Drafter] = None
+    disable_after_rejects: int = 8
+    max_drafter_errors: int = 2
 
 
 class SpecDecoder:
@@ -152,17 +162,27 @@ class SpecDecoder:
             )
         self.eng = engine
         self.k = cfg.k
+        self.cfg_spec = cfg
         self.drafter = cfg.drafter or NgramDrafter(cfg.ngram_max,
                                                    cfg.ngram_min)
         self._accept = jax.jit(spec_accept_tokens)
+        self._finite = jax.jit(finite_rows)
         # pending[slot] = sampled-but-not-fed token id (-1 = none); it is
         # already in req.out/streamed — only its KV write is outstanding.
         self._pending = np.full((engine.batch,), -1, np.int64)
+        # Per-row degradation state: consecutive fully-rejected bursts,
+        # drafter exceptions, and the resulting draft kill-switch. All
+        # reset when the slot turns over (drop_slot).
+        self._reject_streak = np.zeros((engine.batch,), np.int32)
+        self._drafter_errs = np.zeros((engine.batch,), np.int32)
+        self._draft_disabled = np.zeros((engine.batch,), bool)
         # stats (bench_serve reports these)
         self.verify_calls = 0
         self.drafted = 0
         self.accepted = 0
         self.tokens_emitted = 0
+        self.rows_disabled = 0  # rows whose drafting was auto-disabled
+        self.drafter_errors = 0  # drafter exceptions swallowed
 
     # -- stats -------------------------------------------------------------
 
@@ -180,8 +200,42 @@ class SpecDecoder:
         return self.verify_calls / max(self.tokens_emitted, 1)
 
     def drop_slot(self, slot: int):
-        """Forget a slot's pending token (preemption/retirement)."""
+        """Forget a slot's pending token and degradation state
+        (preemption/retirement — the next occupant starts clean)."""
         self._pending[slot] = -1
+        self._reject_streak[slot] = 0
+        self._drafter_errs[slot] = 0
+        self._draft_disabled[slot] = False
+
+    def _disable_row(self, slot: int):
+        if not self._draft_disabled[slot]:
+            self._draft_disabled[slot] = True
+            self.rows_disabled += 1
+
+    def _propose(self, slot: int, entry, n: int) -> List[int]:
+        """Draft for one row, tolerating a hostile drafter: exceptions
+        are swallowed (and counted toward the row's kill-switch) and
+        out-of-vocab token ids are truncated at — a garbage id would
+        index the embedding out of range. A disabled row drafts
+        nothing and decodes correctly at one token per verify."""
+        if self._draft_disabled[slot]:
+            return []
+        try:
+            drafts = list(self.drafter.propose(
+                list(entry.req.prompt) + list(entry.req.out), n
+            ))[:n]
+        except Exception:
+            self.drafter_errors += 1
+            self._drafter_errs[slot] += 1
+            ma = self.cfg_spec.max_drafter_errors
+            if ma and self._drafter_errs[slot] >= ma:
+                self._disable_row(slot)
+            return []
+        vocab = self.eng.cfg.vocab_size
+        for i, t in enumerate(drafts):
+            if not (0 <= int(t) < vocab):
+                return drafts[:i]
+        return drafts
 
     def reset_stats(self):
         """Zero the speculation counters (bench warmup: compile runs must
@@ -190,6 +244,8 @@ class SpecDecoder:
         self.drafted = 0
         self.accepted = 0
         self.tokens_emitted = 0
+        self.rows_disabled = 0
+        self.drafter_errors = 0
 
     # -- the tick ----------------------------------------------------------
 
@@ -210,11 +266,16 @@ class SpecDecoder:
 
         fresh = [e for e in entries if self._pending[e.slot] < 0]
         if fresh:
-            toks = np.asarray(eng._sample(
+            toks, ok = eng._sample(
                 eng._logits, eng._temp, eng._top_k, eng._top_p,
                 eng._seed, eng._step,
-            ))
+            )
+            toks, ok = np.asarray(toks), np.asarray(ok)
             for e in fresh:
+                if not ok[e.slot]:
+                    eng._abort_entry(e, "error")
+                    eng.nonfinite_retired += 1
+                    continue
                 tok = int(toks[e.slot])
                 eng._step[e.slot] += 1
                 emitted_total += 1
@@ -247,9 +308,7 @@ class SpecDecoder:
                 continue
             drafts = []
             if cover > 1:
-                drafts = list(self.drafter.propose(
-                    list(e.req.prompt) + list(e.req.out), cover - 1
-                ))[: cover - 1]
+                drafts = self._propose(slot, e, cover - 1)
             m = len(drafts)
             in_toks[slot, 0] = self._pending[slot]
             if m:
@@ -272,6 +331,7 @@ class SpecDecoder:
         )
         n_acc = np.asarray(n_acc)
         out_toks = np.asarray(out_toks)
+        row_ok = np.asarray(self._finite(logits))
 
         # Rejected-lane scrub: positions the verify wrote that acceptance
         # disowned (lanes n_acc+1 .. n_draft). One fixed-shape program
@@ -280,7 +340,22 @@ class SpecDecoder:
         inval = np.full((eng.batch, k + 1), -1, np.int32)
         rollbacks = []
         for slot, (e, base) in plans.items():
+            if not row_ok[slot]:
+                # Poisoned verify logits: nothing this row produced can
+                # be trusted — retire it (releasing its burst blocks
+                # wholesale) rather than committing NaN-derived tokens.
+                eng._abort_entry(e, "error")
+                eng.nonfinite_retired += 1
+                continue
             na = int(n_acc[slot])
+            m = int(n_draft[slot])
+            if m and na == 0:
+                self._reject_streak[slot] += 1
+                lim = self.cfg_spec.disable_after_rejects
+                if lim and self._reject_streak[slot] >= lim:
+                    self._disable_row(slot)
+            elif na:
+                self._reject_streak[slot] = 0
             burst = [int(t) for t in out_toks[slot, : na + 1]]
             committed, finished = sched.record_tokens(e, burst)
             eng._step[slot] += committed

@@ -1,0 +1,184 @@
+"""Fault injection (serve/faults.py): every injected fault class must
+end in a DEFINED terminal state — correct finish_reason, no leaked
+slots/blocks/refcounts — and degradations must never change served
+tokens (kernel fallback, drafter faults) beyond the poisoned row."""
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import lm_init
+from repro.serve import (
+    FaultInjector,
+    FlakyDrafter,
+    GarbageDrafter,
+    Request,
+    ServeEngine,
+    SpecConfig,
+    assert_leak_free,
+)
+
+
+def _setup(name="llama3-8b"):
+    cfg = reduced(get_config(name))
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, batch=2, **kw):
+    return ServeEngine(cfg, params, batch_size=batch, max_len=64, **kw)
+
+
+def _reqs(n, max_new=6):
+    return [Request(prompt=[1 + i, 2, 3], max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _clean_outputs(cfg, params, n, max_new=6, **kw):
+    eng = _engine(cfg, params, **kw)
+    reqs = _reqs(n, max_new)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return [r.out for r in reqs]
+
+
+@pytest.mark.parametrize("backend", ["contiguous", "paged"])
+def test_nan_logits_retire_only_the_poisoned_row(backend):
+    """NaN at model call k: that row ends finish_reason="error"; every
+    other row's stream is bit-identical to the fault-free run."""
+    cfg, params = _setup()
+    clean = _clean_outputs(cfg, params, 2, max_new=8, backend=backend)
+    eng = _engine(cfg, params, backend=backend)
+    inj = FaultInjector(eng)
+    reqs = _reqs(2, max_new=8)
+    for r in reqs:
+        eng.submit(r)
+    while (len(eng.sched.live) < 2
+           or not all(e.state == "decode"
+                      for e in eng.sched.live.values())):
+        eng.step()
+    victim_slot = next(s for s, e in eng.sched.live.items()
+                       if e.req is reqs[0])
+    inj.poison_logits(victim_slot, after_calls=2)
+    eng.run()
+    assert reqs[0].finish_reason == "error"
+    assert len(reqs[0].out) < 8  # retired early, not padded with junk
+    assert reqs[1].finish_reason == "length"
+    assert reqs[1].out == clean[1]  # bystander row untouched
+    assert eng.nonfinite_retired == 1
+    inj.detach()
+    assert_leak_free(eng)
+
+
+def test_kernel_failure_falls_back_to_gather_bit_exactly():
+    """A raising Pallas program flips the backend to the jnp gather
+    oracle permanently; outputs are the kernel run's, serving never
+    drops a request."""
+    cfg, params = _setup()
+    clean = _clean_outputs(cfg, params, 3, backend="paged")
+    eng = _engine(cfg, params, backend="paged")
+    assert eng.backend.use_kernel
+    inj = FaultInjector(eng)
+    inj.inject_kernel_failure()
+    reqs = _reqs(3)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert not eng.backend.use_kernel
+    assert eng.backend.kernel_fallbacks == 1
+    assert [r.out for r in reqs] == clean
+    assert all(r.finish_reason == "length" for r in reqs)
+    assert eng.robustness_stats()["kernel_fallbacks"] == 1
+    # the rebuilt programs keep serving (no second failure path)
+    more = _reqs(2)
+    for r in more:
+        eng.submit(r)
+    eng.run()
+    assert all(r.finish_reason == "length" for r in more)
+    inj.detach()
+    assert_leak_free(eng)
+
+
+@pytest.mark.parametrize("backend", ["contiguous", "paged"])
+def test_pool_exhaustion_stalls_admission_then_recovers(backend):
+    cfg, params = _setup()
+    eng = _engine(cfg, params, backend=backend, prefix_cache=False)
+    inj = FaultInjector(eng)
+    held = inj.hold_blocks()  # pin the whole pool
+    assert held > 0
+    reqs = _reqs(2)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(5):
+        eng.step()
+    assert all(not r.done for r in reqs)  # stalled, not crashed/dropped
+    assert not eng.sched.live  # nothing admitted into a starved pool
+    inj.release_blocks()
+    eng.run()
+    assert all(r.finish_reason == "length" for r in reqs)
+    inj.detach()
+    assert_leak_free(eng)
+
+
+def test_garbage_drafter_disables_rows_without_changing_tokens():
+    """An out-of-range-junk drafter costs acceptance, never correctness:
+    outputs stay token-for-token the baseline's, and the per-row
+    kill-switch turns drafting off after the reject streak."""
+    cfg, params = _setup()
+    clean = _clean_outputs(cfg, params, 2, max_new=10)
+    eng = _engine(cfg, params, spec=SpecConfig(
+        drafter=GarbageDrafter(cfg.vocab_size, seed=3),
+        disable_after_rejects=2,
+    ))
+    reqs = _reqs(2, max_new=10)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert [r.out for r in reqs] == clean
+    assert eng._spec.rows_disabled >= 1
+    assert eng.robustness_stats()["spec_rows_disabled"] >= 1
+    assert_leak_free(eng)
+
+
+def test_flaky_drafter_errors_counted_and_contained():
+    cfg, params = _setup()
+    clean = _clean_outputs(cfg, params, 2, max_new=8)
+    eng = _engine(cfg, params, spec=SpecConfig(
+        drafter=FlakyDrafter(ok_calls=1), max_drafter_errors=2,
+    ))
+    reqs = _reqs(2, max_new=8)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert [r.out for r in reqs] == clean
+    assert eng._spec.drafter_errors > 0
+    assert eng._spec.rows_disabled >= 1  # disabled after repeated raises
+    assert all(r.finish_reason == "length" for r in reqs)
+    assert_leak_free(eng)
+
+
+def test_latency_spike_is_injected_not_fatal():
+    cfg, params = _setup()
+    eng = _engine(cfg, params)
+    inj = FaultInjector(eng)
+    inj.latency_spike(0.01, after_calls=1)
+    reqs = _reqs(2)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert inj.latency_injected == 1
+    assert all(r.finish_reason == "length" for r in reqs)
+    inj.detach()
+    assert_leak_free(eng)
+
+
+def test_detach_restores_pristine_backend():
+    cfg, params = _setup()
+    eng = _engine(cfg, params)
+    orig_decode = eng.backend.decode
+    inj = FaultInjector(eng)
+    assert eng.backend.decode is not orig_decode
+    inj.hold_blocks(1)
+    inj.detach()
+    assert eng.backend.decode == orig_decode
+    assert eng.backend.num_free_slots == 2  # held slot released

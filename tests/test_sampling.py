@@ -309,3 +309,66 @@ def test_spec_accept_deterministic_in_seed_and_step():
     c = _accept(logits, drafts, 3, temp=1.0, seed=9, step=5)
     np.testing.assert_array_equal(a[1], b[1])
     assert not np.array_equal(a[1], c[1]) or not np.array_equal(a[0], c[0])
+
+
+# ---------------------------------------------------------------------------
+# Non-finite / fully-masked robustness (the sampler guard the engine's
+# poisoned-row retirement builds on)
+# ---------------------------------------------------------------------------
+
+
+def test_nonfinite_logits_never_produce_invalid_tokens():
+    """NaN/+inf rows must still sample IN-RANGE tokens (non-finite
+    entries coerce to -inf; the other rows are untouched)."""
+    rng = np.random.RandomState(7)
+    logits = rng.randn(4, 16).astype(np.float32)
+    logits[1, :] = np.nan
+    logits[2, 5] = np.inf
+    logits[3, 0] = -np.inf
+    toks = _call(logits, [SamplingParams(temperature=t, seed=i)
+                          for i, t in enumerate([0.0, 1.0, 0.0, 1.0])])
+    assert ((toks >= 0) & (toks < 16)).all()
+    # clean rows sample exactly as if the poisoned rows weren't there
+    clean = _call(logits[:1], [SamplingParams(temperature=0.0)])
+    assert toks[0] == clean[0] == logits[0].argmax()
+    # +inf wins greedy once coerced? No: +inf -> -inf, finite max wins.
+    finite = np.where(np.isfinite(logits[2]), logits[2], -np.inf)
+    assert toks[2] == finite.argmax()
+
+
+def test_fully_masked_row_is_defined():
+    """A row with NO support (all -inf after filtering) must not
+    propagate NaN — guard_support falls back to uniform logits, and the
+    categorical stays defined for every row of the batch."""
+    from repro.serve.sampling import guard_support
+
+    logits = np.full((2, 8), -np.inf, np.float32)
+    logits[0] = np.arange(8)
+    guarded, support = guard_support(jnp.asarray(logits))
+    support = np.asarray(support)
+    assert support.tolist() == [True, False]
+    assert np.isfinite(np.asarray(guarded)).all()
+    toks = _call(logits, [SamplingParams(temperature=1.0, seed=3),
+                          SamplingParams(temperature=1.0, seed=4)])
+    assert ((toks >= 0) & (toks < 8)).all()
+
+
+def test_finite_rows_flags_exactly_the_poisoned_rows():
+    from repro.serve.sampling import finite_rows, sample_tokens_checked
+
+    rng = np.random.RandomState(8)
+    logits = rng.randn(4, 16).astype(np.float32)
+    logits[2, 3] = np.nan
+    ok = np.asarray(finite_rows(jnp.asarray(logits)))
+    assert ok.tolist() == [True, True, False, True]
+    sp = stack_params([SamplingParams(temperature=0.0)] * 4)
+    toks, ok2 = sample_tokens_checked(
+        jnp.asarray(logits), sp["temperature"], sp["top_k"], sp["top_p"],
+        sp["seed"], np.zeros((4,), np.int32),
+    )
+    np.testing.assert_array_equal(np.asarray(ok2), ok)
+    # the fused program's tokens are the plain sampler's tokens
+    np.testing.assert_array_equal(
+        np.asarray(toks),
+        _call(logits, [SamplingParams(temperature=0.0)] * 4),
+    )
