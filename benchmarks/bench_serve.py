@@ -67,6 +67,7 @@ from repro.serve import (  # noqa: E402
     ServeEngine,
     SpecConfig,
     WaveEngine,
+    parse_prometheus,
 )
 
 _REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -448,12 +449,19 @@ def bench_async_overload(cfg, params, batch, max_len, block_size,
         async with AsyncServer(eng, scfg) as srv:
             done = await asyncio.gather(
                 *(client(srv, s) for s in trace))
-            return done, srv.snapshot()
+            # Render the exporter surface while the server is still up:
+            # exactly what a Prometheus scrape of /metrics would read.
+            return done, srv.snapshot(), srv.metrics_text()
 
     t0 = time.perf_counter()
-    done, snap = asyncio.run(drive())
+    done, snap, prom_text = asyncio.run(drive())
     makespan = time.perf_counter() - t0
     assert_leak_free(eng)  # overload must not leak a single block
+    # The exporter text must round-trip through the strict parser — a
+    # malformed sample line here would break a real Prometheus scrape.
+    parsed = parse_prometheus(prom_text)
+    assert parsed["counters"].get(
+        "repro_serve_sheds_total", 0) > 0, "overload did not shed"
     sheds = snap.get("sheds", 0)
     misses = (snap.get("deadline_misses_ttft", 0)
               + snap.get("deadline_misses_total", 0))
@@ -483,6 +491,10 @@ def bench_async_overload(cfg, params, batch, max_len, block_size,
         "ttft_p50_s": float(snap.get("ttft_s", {}).get("p50", 0.0)),
         "makespan_s": float(makespan),
         "leak_free": True,
+        "exporter_valid": True,
+        "exporter_counters": len(parsed["counters"]),
+        "exporter_histograms": len(parsed["histograms"]),
+        "engine_info": eng.config_info(),
     }
 
 
@@ -592,6 +604,9 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
         "paged_attention_kernel": paged_kernel,
         "spec_decode": spec,
         "async_overload": overload,
+        # Frozen engine config of the overload engine — the same labels
+        # the exporter serves as the `repro_serve_engine_info` gauge.
+        "engine_info": overload["engine_info"],
         "continuous_over_wave_tok_s": float(speedup),
         "paged_over_contiguous_peak_cache": float(mem_ratio),
     }
@@ -627,6 +642,8 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
         ),
         "shed_rate": round(overload["shed_rate"], 3),
         "deadline_miss_rate": round(overload["deadline_miss_rate"], 3),
+        "exporter_metrics": (overload["exporter_counters"]
+                             + overload["exporter_histograms"]),
     })
     payload["history"] = history
     with open(json_path, "w") as f:

@@ -5,6 +5,8 @@
       --max-queue 4               # shed + retry under a burst
   PYTHONPATH=src python examples/serve_async.py --deadline-ms 50 \
       --cancel-after 3            # deadlines + mid-stream cancellation
+  PYTHONPATH=src python examples/serve_async.py --trace \
+      --metrics-port 0            # span timelines + /metrics scrape
 
 Random weights (reduced config) — this demonstrates the serving-policy
 machinery, not text quality: concurrent clients stream tokens through
@@ -12,7 +14,13 @@ machinery, not text quality: concurrent clients stream tokens through
 the hood; admission control sheds (with retry/backoff) when the bounded
 queue or memory budget overflows; deadlines and client cancellations
 free every row resource within one engine tick. The final metric
-snapshot prints the counters the chaos harness and bench assert on."""
+snapshot prints the counters the chaos harness and bench assert on.
+
+``--trace`` turns on the host-side span tracer + flight recorder
+(serve/tracing.py) and prints each request's timeline plus a text
+Gantt; ``--metrics-port`` binds the Prometheus /metrics + /healthz
+endpoints (0 = pick an ephemeral port) and scrapes /metrics once at
+the end."""
 import argparse
 import asyncio
 import sys
@@ -23,26 +31,61 @@ import jax
 
 from repro.configs import get_config, reduced
 from repro.models import lm_init
-from repro.serve import AsyncServer, ServeEngine, ServerConfig, ShedError
+from repro.serve import (
+    AsyncServer,
+    ServeEngine,
+    ServerConfig,
+    ShedError,
+    render_timeline,
+    timeline,
+)
 
 
-async def client(srv, i, args):
+async def client(srv, i, args, reqs):
     prompt = [1 + i, 2 + i, 3 + i]
     toks = []
     try:
-        n = 0
-        async for tok in srv.generate(
+        req = await srv.submit(
             prompt, max_new_tokens=args.max_new,
             deadline_s=(args.deadline_ms / 1e3 if args.deadline_ms else None),
-        ):
-            toks.append(tok)
-            n += 1
-            if args.cancel_after and n >= args.cancel_after:
-                break  # abandoning the stream cancels the request
+        )
     except ShedError as e:
         print(f"[req {i}] shed ({e.reason})")
         return
+    reqs.append(req)
+    n = 0
+    async for tok in srv.stream(req):
+        toks.append(tok)
+        n += 1
+        if args.cancel_after and n >= args.cancel_after:
+            break  # abandoning the stream cancels the request
     print(f"[req {i}] {toks}")
+
+
+async def scrape(addr, path="/metrics"):
+    """One GET against the server's observability listener."""
+    reader, writer = await asyncio.open_connection(*addr)
+    writer.write(f"GET {path} HTTP/1.1\r\nHost: _\r\n\r\n".encode("ascii"))
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    return raw.decode("utf-8").split("\r\n\r\n", 1)[1]
+
+
+def print_timelines(reqs):
+    print("\nper-request timelines:")
+    print(f"  {'req':>3} {'reason':<13} {'tok':>3} {'queue_ms':>8} "
+          f"{'ttft_ms':>8} {'total_ms':>8} {'spans':>5}")
+    for i, req in enumerate(reqs):
+        tl = timeline(req)
+        def ms(key):
+            v = tl.get(key)
+            return f"{v * 1e3:8.1f}" if v is not None else f"{'-':>8}"
+        print(f"  {i:>3} {tl['finish_reason'] or '?':<13} "
+              f"{tl['n_tokens']:>3} {ms('queue_s')} {ms('ttft_s')} "
+              f"{ms('total_s')} {tl['n_spans']:>5}")
+    print()
+    print(render_timeline(reqs))
 
 
 async def run(args):
@@ -51,20 +94,41 @@ async def run(args):
     eng = ServeEngine(
         cfg, params, batch_size=args.batch, max_len=64,
         backend="paged" if args.paged else "contiguous",
+        trace=args.trace,
+        flight_recorder=64 if args.trace else 0,
     )
-    scfg = ServerConfig(max_queue=args.max_queue)
+    scfg = ServerConfig(max_queue=args.max_queue,
+                        metrics_port=args.metrics_port)
     if args.overload:
         # No retries and a tiny demand budget: the burst must shed.
         scfg.max_retries = 0
         scfg.max_demand_factor = 0.5
+    reqs = []
     async with AsyncServer(eng, scfg) as srv:
+        if srv.metrics_addr is not None:
+            host, port = srv.metrics_addr
+            print(f"metrics: http://{host}:{port}/metrics  "
+                  f"healthz: http://{host}:{port}/healthz")
         await asyncio.gather(
-            *(client(srv, i, args) for i in range(args.requests))
+            *(client(srv, i, args, reqs) for i in range(args.requests))
         )
+        prom = None
+        if srv.metrics_addr is not None:
+            prom = await scrape(srv.metrics_addr)
         snap = srv.snapshot()
     print("\nmetrics:")
     for k, v in snap.items():
         print(f"  {k}: {v}")
+    if args.trace:
+        print_timelines(reqs)
+        if eng.recorder is not None and eng.recorder.ticks:
+            print("\nflight recorder (last ticks):")
+            print(eng.recorder.render(6))
+    if prom is not None:
+        head = prom.splitlines()[:12]
+        print("\n/metrics scrape (first lines):")
+        for line in head:
+            print(f"  {line}")
 
 
 def main():
@@ -81,6 +145,10 @@ def main():
                     help="per-request total deadline")
     ap.add_argument("--cancel-after", type=int, default=0,
                     help="clients abandon their stream after N tokens")
+    ap.add_argument("--trace", action="store_true",
+                    help="per-request span timelines + flight recorder")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="bind /metrics + /healthz (0 = ephemeral port)")
     asyncio.run(run(ap.parse_args()))
 
 

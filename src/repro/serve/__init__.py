@@ -13,7 +13,9 @@ Layering (docs/serving.md has the full design):
   engine        — ServeEngine (continuous) / WaveEngine (lockstep baseline)
   server        — AsyncServer: asyncio front end (deadlines, cancellation,
                   load shedding, retry-with-backoff, token streaming)
-  metrics       — ServeMetrics counter/series surface + stuck-step Watchdog
+  metrics       — ServeMetrics counter/histogram surface + stuck-step Watchdog
+  tracing       — per-request span timelines + engine tick flight recorder
+  exporter      — Prometheus text-format rendering (/metrics) + strict parser
   faults        — seeded fault injection + chaos harness (CI chaos-smoke)
 """
 from .block_manager import (  # noqa: F401
@@ -36,6 +38,10 @@ from .engine import (  # noqa: F401
     make_prefill_chunk_step,
     make_prefill_step,
 )
+from .exporter import (  # noqa: F401
+    parse_prometheus,
+    render_prometheus,
+)
 from .faults import (  # noqa: F401
     FaultInjector,
     FlakyDrafter,
@@ -45,6 +51,7 @@ from .faults import (  # noqa: F401
     run_chaos,
 )
 from .metrics import (  # noqa: F401
+    Histogram,
     ServeMetrics,
     Watchdog,
     collect_engine_metrics,
@@ -79,4 +86,12 @@ from .spec_decode import (  # noqa: F401
     NgramDrafter,
     SpecConfig,
     SpecDecoder,
+)
+from .tracing import (  # noqa: F401
+    FlightRecorder,
+    ProgramTimer,
+    Tracer,
+    render_timeline,
+    timeline,
+    validate_timeline,
 )

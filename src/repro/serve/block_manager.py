@@ -506,6 +506,16 @@ class PagedBackend(CacheBackend):
         just report the configured pool size in any sustained run."""
         return self.live_block_hw * self.bytes_per_block() + self.ssm_bytes()
 
+    def occupancy(self) -> dict:
+        live = int(np.unique(self.tables[self.tables != 0]).size)
+        return {
+            "blocks_free": self.mgr.num_free,
+            "blocks_used": self.mgr.num_used,
+            "blocks_live": live,
+            "slots_free": len(self._free_slots),
+            "slots_total": self.num_slots,
+        }
+
     def _touch_live_hw(self):
         # unique physical blocks: a prefix-shared block backing several
         # table rows is ONE resident block, not one per row

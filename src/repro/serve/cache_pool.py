@@ -212,6 +212,11 @@ class CacheBackend:
         """High-water cache memory this backend actually needed."""
         raise NotImplementedError
 
+    def occupancy(self) -> dict:
+        """Host-side memory occupancy for the flight recorder (one dict
+        per engine tick — must be cheap and jax-free)."""
+        return {}
+
 
 class ContiguousBackend(CacheBackend):
     """`CachePool` behind the CacheBackend interface: admission == a free
@@ -301,3 +306,7 @@ class ContiguousBackend(CacheBackend):
     def peak_cache_bytes(self) -> int:
         return sum(leaf.nbytes
                    for leaf in jax.tree_util.tree_leaves(self.pool.cache))
+
+    def occupancy(self) -> dict:
+        return {"slots_free": self.pool.num_free,
+                "slots_total": self.num_slots}

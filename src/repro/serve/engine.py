@@ -53,6 +53,18 @@ from .sampling import (
 )
 from .scheduler import Request, Scheduler
 from .spec_decode import SpecConfig, SpecDecoder
+from .tracing import (
+    SPAN_ADMITTED,
+    SPAN_DECODE_TICK,
+    SPAN_KERNEL_FALLBACK,
+    SPAN_PREEMPTED,
+    SPAN_PREFILL_CHUNK,
+    SPAN_REQUEUED,
+    SPAN_RETIRED,
+    FlightRecorder,
+    ProgramTimer,
+    Tracer,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -102,7 +114,8 @@ class ServeEngine:
                  prefix_cache: bool = True, use_kernel: bool = True,
                  cache_generated: bool = False,
                  spec: Optional[SpecConfig] = None,
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None,
+                 trace: bool = False, flight_recorder: int = 0):
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -160,6 +173,27 @@ class ServeEngine:
         # rows livelock — the preempted one instantly re-admits into its
         # own freed blocks and starves the other into preempting, forever.
         self._admission_hold = False
+        # Observability (serve/tracing.py): per-request span timelines
+        # (trace=True) and a bounded ring of per-tick records
+        # (flight_recorder=N). Both are host-side only — no jitted
+        # program changes, no recompiles, bit-identical served tokens.
+        self.tracer = Tracer() if trace else None
+        self.recorder = (FlightRecorder(flight_recorder)
+                         if flight_recorder else None)
+        self.ticks = 0
+        self._kfb_seen = getattr(self.backend, "kernel_fallbacks", 0)
+        self._timers = {}
+        if self.recorder is not None:
+            # Wrap the backend's public model entry points + the sampler
+            # with host-side timers. FaultInjector attaches AFTER engine
+            # construction and wraps whatever is bound then, so injected
+            # faults stay timed and detach() restores the timed methods.
+            for name in ("prefill_chunk", "decode", "verify"):
+                timer = ProgramTimer(name, getattr(self.backend, name))
+                setattr(self.backend, name, timer)
+                self._timers[name] = timer
+            self._sample = ProgramTimer("sample", self._sample)
+            self._timers["sample"] = self._sample
 
     # -- request intake ----------------------------------------------------
 
@@ -175,16 +209,23 @@ class ServeEngine:
                 f"(prompt {len(req.prompt)} + max_new {req.max_new_tokens})"
             )
         self.sched.submit(req)
+        if self.tracer is not None:
+            self.tracer.start(req)
 
     # -- tick phases -------------------------------------------------------
 
-    def _admit(self):
+    def _admit(self) -> int:
+        admitted = 0
         while self.sched.has_queued() and not self._admission_hold:
             res = self.backend.try_admit(self.sched.peek())
             if res is None:
                 break  # FIFO: head blocks until memory frees
             slot, cached_len = res
             entry = self.sched.bind(slot, start_pos=cached_len)
+            admitted += 1
+            if self.tracer is not None:
+                self.tracer.span(entry.req, SPAN_ADMITTED, slot=slot,
+                                 cached=cached_len)
             sp = entry.req.sampling
             if sp is GREEDY:
                 sp = self.default_sampling
@@ -194,15 +235,20 @@ class ServeEngine:
             self._top_p[slot] = sp.top_p
             self._seed[slot] = sp.seed
             self._step[slot] = 0
+        return admitted
 
     def _do_prefill_chunk(self) -> bool:
         entry = self.sched.next_prefill()
         if entry is None:
             return False
+        chunk_i = entry.next_chunk
         toks, poss = entry.take_chunk()
         self._logits = self.backend.prefill_chunk(
             self.params, self._logits, entry.slot, toks, poss
         )
+        if self.tracer is not None:
+            self.tracer.span(entry.req, SPAN_PREFILL_CHUNK, i=chunk_i,
+                             of=entry.n_chunks)
         if entry.prefill_done():
             self.backend.prefill_finished(entry)
         return True
@@ -212,8 +258,13 @@ class ServeEngine:
         request back at the head of the queue for a full restart. Its
         own prefix-cache hits are disabled on the retry so eviction can
         always reclaim enough blocks to finish it."""
+        if self.tracer is not None:
+            self.tracer.span(entry.req, SPAN_PREEMPTED, slot=entry.slot,
+                             discarded=len(entry.req.out))
         self.backend.retire(entry.slot)
         self.sched.requeue(entry)
+        if self.tracer is not None:
+            self.tracer.span(entry.req, SPAN_REQUEUED)
         entry.req.no_prefix_cache = True
         self.preemptions += 1
         if self._spec is not None:
@@ -231,6 +282,9 @@ class ServeEngine:
         if self._spec is not None:
             self._spec.drop_slot(entry.slot)
         self._admission_hold = False
+        if self.tracer is not None:
+            self.tracer.span(entry.req, SPAN_RETIRED,
+                             reason=entry.req.finish_reason)
 
     def _abort_entry(self, entry, reason: str):
         """Abnormal retirement (cancellation / deadline / poisoned row):
@@ -242,6 +296,8 @@ class ServeEngine:
         if self._spec is not None:
             self._spec.drop_slot(entry.slot)
         self._admission_hold = False
+        if self.tracer is not None:
+            self.tracer.span(entry.req, SPAN_RETIRED, reason=reason)
 
     def cancel(self, req: Request, reason: str = "cancelled") -> bool:
         """Cancel a request wherever it is: queued (dropped before it
@@ -253,6 +309,8 @@ class ServeEngine:
             return False
         if self.sched.drop_queued(req, reason):
             self.cancellations += 1
+            if self.tracer is not None:
+                self.tracer.span(req, SPAN_RETIRED, reason=reason)
             return True
         entry = self.sched.entry_for(req)
         if entry is None:
@@ -283,6 +341,8 @@ class ServeEngine:
             if kind is not None:
                 self.sched.drop_queued(req, "deadline")
                 self.deadline_misses[kind] += 1
+                if self.tracer is not None:
+                    self.tracer.span(req, SPAN_RETIRED, reason="deadline")
         for entry in list(self.sched.live.values()):
             kind = self._deadline_kind(entry.req, now)
             if kind is not None:
@@ -320,7 +380,10 @@ class ServeEngine:
             tok = int(toks[e.slot])
             self._step[e.slot] += 1
             emitted += 1
-            if self.sched.record_token(e, tok):
+            finished = self.sched.record_token(e, tok)
+            if self.tracer is not None:
+                self.tracer.span(e.req, SPAN_DECODE_TICK, token=tok)
+            if finished:
                 self._retire_entry(e)
             elif not self.backend.ensure_decode_block(e.slot, e.pos):
                 self._preempt(e)
@@ -341,11 +404,40 @@ class ServeEngine:
     def step(self) -> int:
         """One engine tick: expire deadlines, admit, (maybe) one prefill
         chunk, one batched sample+decode pass. Returns tokens emitted
-        this tick."""
+        this tick. With observability on, the tick also emits
+        kernel-fallback spans (detected by counter delta — the fallback
+        happens inside the backend) and appends one flight-recorder
+        record."""
+        t0 = time.perf_counter() if self.recorder is not None else 0.0
         self._expire_deadlines()
-        self._admit()
-        self._do_prefill_chunk()
-        return self._do_decode()
+        admitted = self._admit()
+        prefilled = self._do_prefill_chunk()
+        emitted = self._do_decode()
+        self.ticks += 1
+        kfb = getattr(self.backend, "kernel_fallbacks", 0)
+        if kfb != self._kfb_seen:
+            self._kfb_seen = kfb
+            if self.tracer is not None:
+                for e in self.sched.live.values():
+                    self.tracer.span(e.req, SPAN_KERNEL_FALLBACK)
+        if self.recorder is not None:
+            self.recorder.record({
+                "tick": self.ticks,
+                "t": t0,
+                "wall_s": round(time.perf_counter() - t0, 6),
+                "queued": len(self.sched.queue),
+                "live": len(self.sched.live),
+                "decode_rows": len(self.sched.decode_entries()),
+                "admitted": admitted,
+                "prefilled": int(prefilled),
+                "emitted": emitted,
+                "kernel_fallbacks": kfb,
+                "jit_cache_sizes": self.jit_cache_sizes(),
+                "programs": {name: t.take_tick()
+                             for name, t in self._timers.items()},
+                **self.backend.occupancy(),
+            })
+        return emitted
 
     def run(self) -> int:
         """Drain queue + live rows to completion; returns total decode
@@ -364,6 +456,34 @@ class ServeEngine:
         if self._spec is not None:
             sizes += (self._spec._accept._cache_size(),)
         return sizes
+
+    def config_info(self) -> dict:
+        """Frozen engine configuration, as flat str/int values — the
+        exporter (serve/exporter.py) renders it as the
+        ``engine_info{...} 1`` gauge so a scrape identifies exactly what
+        was serving; the bench stores it in BENCH_serve.json."""
+        info = {
+            "arch": str(self.cfg.name),
+            "backend": ("paged" if isinstance(self.backend, PagedBackend)
+                        else "contiguous"),
+            "max_batch": self.batch,
+            "max_len": self.max_len,
+            "prefill_chunk": self.sched.prefill_chunk,
+            "spec": "on" if self._spec is not None else "off",
+            "trace": "on" if self.tracer is not None else "off",
+        }
+        if isinstance(self.backend, PagedBackend):
+            be = self.backend
+            info.update(
+                block_size=be.block_size,
+                num_blocks=be.num_blocks,
+                use_kernel="on" if be.use_kernel else "off",
+                prefix_cache="on" if be.prefix is not None else "off",
+                cache_generated="on" if be.cache_generated else "off",
+            )
+        if self._spec is not None:
+            info["spec_k"] = self._spec.k
+        return info
 
     def robustness_stats(self) -> dict:
         """Degradation/termination counters (serve/metrics.py merges

@@ -317,6 +317,9 @@ def run_chaos(engine, n_requests: int = 24, seed: int = 0,
                     req.done = True
                     req.finish_reason = "shed"
                     stats["sheds"] = stats.get("sheds", 0) + 1
+                    tracer = getattr(engine, "tracer", None)
+                    if tracer is not None:
+                        tracer.shed(req)
         if rng.random() < p_cancel:
             victims = ([e.req for e in engine.sched.live.values()]
                        + list(engine.sched.queue))
@@ -344,6 +347,27 @@ def run_chaos(engine, n_requests: int = 24, seed: int = 0,
         assert r.finish_reason in _TERMINAL, (
             f"undefined terminal state {r.finish_reason!r}"
         )
+    # Observability contract (engines built with trace/flight_recorder):
+    # every terminal request's span timeline must be internally
+    # consistent with its finish_reason, the tick recorder must actually
+    # have recorded, and a forced stall must produce a post-mortem dump.
+    tracer = getattr(engine, "tracer", None)
+    if tracer is not None:
+        from .tracing import validate_timeline
+        for r in reqs:
+            validate_timeline(r)
+        stats["trace_spans"] = tracer.spans_recorded
+        stats["timelines_valid"] = len(reqs)
+    recorder = getattr(engine, "recorder", None)
+    if recorder is not None:
+        assert recorder.ticks > 0 and recorder.records(), (
+            "flight recorder empty after a chaos run"
+        )
+        _force_stall_dump(engine, inj)
+        assert recorder.dumps >= 1, "forced stall produced no dump"
+        assert recorder.last_dump["records"], "stall dump carries no ticks"
+        stats["flight_ticks"] = recorder.ticks
+        stats["stall_dumps"] = recorder.dumps
     inj.detach()
     assert_leak_free(engine)
     from collections import Counter
@@ -352,6 +376,38 @@ def run_chaos(engine, n_requests: int = 24, seed: int = 0,
                **{f"finish_{k}": v for k, v in sorted(reasons.items())})
     out.update(engine.robustness_stats())
     return out
+
+
+def _force_stall_dump(engine, inj: FaultInjector, stall_s: float = 0.02,
+                      timeout_s: float = 10.0):
+    """Post-chaos stall exercise: pin the whole pool, submit a probe
+    request that therefore cannot admit, and spin the tick loop under a
+    fast Watchdog whose on_stall dumps the flight recorder — the
+    post-mortem path the server wires up, driven synchronously. The
+    probe then completes normally once the pool is released (its
+    timeline must validate like any other request's)."""
+    from .metrics import Watchdog
+    recorder = engine.recorder
+    wd = Watchdog(
+        stall_s=stall_s,
+        on_stall=lambda s: recorder.dump("watchdog_stall"),
+    )
+    probe = Request(prompt=[1, 2, 3], max_new_tokens=2)
+    inj.hold_blocks()
+    engine.submit(probe)
+    deadline = time.perf_counter() + timeout_s
+    while wd.stalls == 0 and time.perf_counter() < deadline:
+        emitted = engine.step()
+        wd.beat(emitted > 0, engine.sched.pending())
+    assert wd.stalls >= 1, "stall never fired with the pool pinned"
+    inj.release_blocks()
+    while engine.sched.pending():
+        engine.step()
+    assert probe.done and probe.finish_reason in _TERMINAL
+    tracer = getattr(engine, "tracer", None)
+    if tracer is not None:
+        from .tracing import validate_timeline
+        validate_timeline(probe)
 
 
 # ---------------------------------------------------------------------------
@@ -379,6 +435,10 @@ def _main(argv=None):
                     help="speculative decoding + garbage drafter")
     ap.add_argument("--kernel-failure", action="store_true",
                     help="break the Pallas program on the first call")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="disable span timelines + the flight recorder "
+                         "(on by default: the chaos run doubles as the "
+                         "observability acceptance check)")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.config))
@@ -389,6 +449,9 @@ def _main(argv=None):
             drafter=GarbageDrafter(cfg.vocab_size, seed=args.seed),
             disable_after_rejects=2,
         )
+    if not args.no_trace:
+        kw["trace"] = True
+        kw["flight_recorder"] = 256
     eng = ServeEngine(
         cfg, params, batch_size=2, max_len=64, backend=args.backend,
         max_queue=8, **kw,
@@ -397,6 +460,10 @@ def _main(argv=None):
                       kernel_failure=args.kernel_failure)
     for k, v in sorted(stats.items()):
         print(f"CHAOS {k}={v}")
+    if eng.recorder is not None and eng.recorder.last_dump is not None:
+        print("-- flight recorder (last stall dump) --")
+        print(eng.recorder.render(
+            6, records=eng.recorder.last_dump["records"]))
     print("CHAOS leak_free=1")
 
 

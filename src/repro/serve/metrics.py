@@ -4,12 +4,15 @@
 host-side python, no jax — shared by the async front end
 (serve/server.py), the fault harness (serve/faults.py), and the bench
 (benchmarks/bench_serve.py, which exports a snapshot into
-``BENCH_serve.json``). Counters are monotonic ints; series collect raw
-float observations (queue time, TTFT, total latency) and summarize to
-count/mean/p50/p99 at snapshot time.
+``BENCH_serve.json``). Counters are monotonic ints; series are
+``Histogram``s: Prometheus-style cumulative buckets (what
+serve/exporter.py renders as ``_bucket``/``_sum``/``_count``) that ALSO
+retain the raw observations, so ``snapshot()`` still summarizes to
+exact count/mean/p50/p99.
 
 Canonical counter names (the failure-mode matrix in docs/serving.md maps
-each to a finish_reason / degradation):
+each to a finish_reason / degradation; docs/observability.md maps each
+to the exported metric name):
 
     submitted, completed, sheds, shed_queue_full, shed_memory,
     shed_retries, cancellations, deadline_misses_ttft,
@@ -20,36 +23,97 @@ each to a finish_reason / degradation):
 ``Watchdog`` detects a STUCK engine: work is pending but no token has
 been emitted (and no request has terminated) for longer than
 ``stall_s``. It never kills anything itself — it raises a counter and
-invokes an optional callback, leaving policy to the operator. The server
-feeds it from its tick loop.
+invokes an optional callback with the stall duration (the server's
+callback observes the duration as a series and dumps the engine's
+flight recorder for a post-mortem), leaving policy to the operator. The
+server feeds it from its tick loop.
 """
 from __future__ import annotations
 
+import math
 import time
+from bisect import bisect_left
 from collections import defaultdict
 from typing import Callable, Dict, List, Optional
 
 
 def _percentile(sorted_vals: List[float], q: float) -> float:
-    """Nearest-rank percentile over an already-sorted list."""
+    """Nearest-rank percentile over an already-sorted list: the
+    ceil(q/100 * n)-th smallest value (1-indexed)."""
     if not sorted_vals:
         return 0.0
-    idx = min(len(sorted_vals) - 1, int(q / 100.0 * len(sorted_vals)))
-    return sorted_vals[idx]
+    n = len(sorted_vals)
+    idx = max(0, math.ceil(q / 100.0 * n) - 1)
+    return sorted_vals[min(idx, n - 1)]
+
+
+# Latency-oriented bucket bounds (seconds), ~1ms..60s. The exporter adds
+# the implicit +Inf bucket.
+DEFAULT_BUCKETS = (
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+    1.0, 2.5, 5.0, 10.0, 30.0, 60.0,
+)
+
+
+class Histogram:
+    """Cumulative-bucket histogram that retains raw observations.
+
+    ``bucket_counts[i]`` counts observations v with
+    ``bounds[i-1] < v <= bounds[i]`` (non-cumulative storage; the
+    exporter cumulates at render time per Prometheus ``le`` semantics).
+    ``raw`` keeps every observation so snapshot percentiles stay exact —
+    series here are per-request latencies, small by construction."""
+
+    __slots__ = ("bounds", "bucket_counts", "sum", "count", "raw")
+
+    def __init__(self, bounds=DEFAULT_BUCKETS):
+        assert list(bounds) == sorted(bounds), "bucket bounds must ascend"
+        self.bounds = tuple(float(b) for b in bounds)
+        self.bucket_counts = [0] * len(self.bounds)
+        self.sum = 0.0
+        self.count = 0
+        self.raw: List[float] = []
+
+    def observe(self, value: float):
+        v = float(value)
+        self.raw.append(v)
+        self.sum += v
+        self.count += 1
+        i = bisect_left(self.bounds, v)
+        if i < len(self.bounds):
+            self.bucket_counts[i] += 1
+        # else: only the implicit +Inf bucket (== count) covers it
+
+    def cumulative(self) -> List[int]:
+        """Cumulative counts per bound (le semantics), excluding +Inf."""
+        out, run = [], 0
+        for c in self.bucket_counts:
+            run += c
+            out.append(run)
+        return out
+
+    def summary(self) -> dict:
+        s = sorted(self.raw)
+        return {
+            "count": self.count,
+            "mean": self.sum / self.count if self.count else 0.0,
+            "p50": _percentile(s, 50),
+            "p99": _percentile(s, 99),
+        }
 
 
 class ServeMetrics:
-    """Monotonic counters + raw-observation series with a dict snapshot."""
+    """Monotonic counters + histogram series with a dict snapshot."""
 
     def __init__(self):
         self.counters: Dict[str, int] = defaultdict(int)
-        self.series: Dict[str, List[float]] = defaultdict(list)
+        self.series: Dict[str, Histogram] = defaultdict(Histogram)
 
     def inc(self, name: str, n: int = 1):
         self.counters[name] += n
 
     def observe(self, name: str, value: float):
-        self.series[name].append(float(value))
+        self.series[name].observe(value)
 
     def count(self, name: str) -> int:
         return self.counters.get(name, 0)
@@ -63,14 +127,8 @@ class ServeMetrics:
 
     def snapshot(self) -> dict:
         out: dict = dict(sorted(self.counters.items()))
-        for name, vals in sorted(self.series.items()):
-            s = sorted(vals)
-            out[name] = {
-                "count": len(s),
-                "mean": sum(s) / len(s) if s else 0.0,
-                "p50": _percentile(s, 50),
-                "p99": _percentile(s, 99),
-            }
+        for name, hist in sorted(self.series.items()):
+            out[name] = hist.summary()
         return out
 
 
@@ -93,7 +151,11 @@ class Watchdog:
     fires when pending work sees no progress for `stall_s` seconds —
     a wedged device call, a scheduler livelock, a fault that ate a row.
     Firing is edge-triggered (once per stall episode, rearmed by the
-    next progress) so a genuinely stuck engine does not spam."""
+    next progress) so a genuinely stuck engine does not spam.
+    ``on_stall`` receives the stall duration in seconds; the server's
+    callback records it as the ``watchdog_stall_s`` series and dumps the
+    engine's flight recorder. ``last_stall_s`` keeps the most recent
+    duration for introspection."""
 
     def __init__(self, stall_s: float = 30.0,
                  on_stall: Optional[Callable[[float], None]] = None):
@@ -101,6 +163,7 @@ class Watchdog:
         self.stall_s = stall_s
         self.on_stall = on_stall
         self.stalls = 0
+        self.last_stall_s = 0.0
         self._last_progress = time.perf_counter()
         self._armed = True
 
@@ -114,6 +177,7 @@ class Watchdog:
         stalled_for = now - self._last_progress
         if self._armed and stalled_for >= self.stall_s:
             self.stalls += 1
+            self.last_stall_s = stalled_for
             self._armed = False  # edge-triggered: rearm on next progress
             if self.on_stall is not None:
                 self.on_stall(stalled_for)

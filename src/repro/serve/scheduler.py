@@ -84,6 +84,10 @@ class Request:
     # replays the identical seeded stream, so callbacks stay suppressed
     # until generation passes this watermark (no duplicate streaming).
     stream_resume: int = 0
+    # Trace timeline: (perf_counter, span_kind, attrs) events appended by
+    # serve/tracing.py when the engine runs with trace=True; None when
+    # tracing is off (the untraced cost is one `is None` check).
+    spans: Optional[List[tuple]] = None
 
 
 # Slot states

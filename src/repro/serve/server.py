@@ -33,19 +33,32 @@ have:
   synchronous ``cancel`` does the freeing; the server just routes it.
 * **Watchdog.** The pump feeds a stuck-step ``Watchdog``
   (serve/metrics.py): pending work with no progress for ``stall_s``
-  raises the ``watchdog_stalls`` counter.
+  raises the ``watchdog_stalls`` counter, records the stall duration as
+  the ``watchdog_stall_s`` series, and — when the engine runs a flight
+  recorder — dumps the per-tick ring for a post-mortem (to
+  ``dump_dir`` if set, else in memory as ``recorder.last_dump``).
+* **Observability endpoints.** With ``metrics_port`` set (0 = pick an
+  ephemeral port) the server answers HTTP GETs on ``/metrics``
+  (Prometheus text format, serve/exporter.py — counters, latency
+  histograms, and the frozen ``engine_info`` gauge) and ``/healthz``
+  (JSON liveness: pump state, queue depth, stall count; 503 once the
+  pump has crashed).
 
 The pump never lets an engine exception kill streams silently: a
-crashed pump finalizes every open request with finish_reason="error"
-and wakes its consumers.
+crashed pump finalizes every open request with finish_reason="error",
+wakes its consumers, and dumps the flight recorder (reason
+"pump_crash") when one is attached.
 """
 from __future__ import annotations
 
 import asyncio
+import json
+import os
 import time
 from dataclasses import dataclass
 from typing import AsyncIterator, Dict, List, Optional
 
+from .exporter import CONTENT_TYPE, render_prometheus
 from .metrics import ServeMetrics, Watchdog, collect_engine_metrics
 from .sampling import GREEDY, SamplingParams
 from .scheduler import QueueFull, Request
@@ -86,6 +99,13 @@ class ServerConfig:
     # (None = no deadline).
     default_ttft_deadline_s: Optional[float] = None
     default_deadline_s: Optional[float] = None
+    # Observability: None = no HTTP endpoints; 0 = bind an ephemeral
+    # port (read it back from ``srv.metrics_addr``).
+    metrics_port: Optional[int] = None
+    metrics_host: str = "127.0.0.1"
+    # Where watchdog/pump-crash flight-recorder dumps are written as
+    # JSON (one file per dump); None keeps them in memory only.
+    dump_dir: Optional[str] = None
 
 
 class AsyncServer:
@@ -108,8 +128,7 @@ class AsyncServer:
         self.config = config or ServerConfig()
         self.metrics = metrics or ServeMetrics()
         self.watchdog = Watchdog(
-            self.config.watchdog_stall_s,
-            on_stall=lambda s: self.metrics.inc("watchdog_stalls"),
+            self.config.watchdog_stall_s, on_stall=self._on_stall,
         )
         if self.eng.sched.max_queue is None:
             self.eng.sched.max_queue = self.config.max_queue
@@ -119,7 +138,31 @@ class AsyncServer:
         self._open: Dict[int, Request] = {}
         self._pump_task: Optional[asyncio.Task] = None
         self._running = False
+        self._crashed = False
         self._wake = asyncio.Event()  # submission -> pump wakes instantly
+        self._http_server: Optional[asyncio.AbstractServer] = None
+        self.metrics_addr: Optional[tuple] = None  # (host, port) once bound
+
+    # -- observability hooks -----------------------------------------------
+
+    def _on_stall(self, stalled_for: float):
+        """Watchdog callback: count + record the stall duration, and
+        freeze the engine's flight recorder for the post-mortem."""
+        self.metrics.inc("watchdog_stalls")
+        self.metrics.observe("watchdog_stall_s", stalled_for)
+        self._dump_recorder("watchdog_stall")
+
+    def _dump_recorder(self, reason: str) -> Optional[dict]:
+        rec = getattr(self.eng, "recorder", None)
+        if rec is None:
+            return None
+        path = None
+        if self.config.dump_dir is not None:
+            path = os.path.join(
+                self.config.dump_dir,
+                f"flight_{reason}_{rec.dumps}.json",
+            )
+        return rec.dump(reason, path=path)
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -127,6 +170,22 @@ class AsyncServer:
         assert self._pump_task is None, "server already started"
         self._running = True
         self._pump_task = asyncio.create_task(self._pump())
+        if self.config.metrics_port is not None:
+            await self.start_metrics_server()
+
+    async def start_metrics_server(self, host: Optional[str] = None,
+                                   port: Optional[int] = None) -> int:
+        """Bind the /metrics + /healthz HTTP listener; returns the bound
+        port (useful with port 0). Idempotent per server instance."""
+        assert self._http_server is None, "metrics server already bound"
+        host = host if host is not None else self.config.metrics_host
+        port = port if port is not None else self.config.metrics_port or 0
+        self._http_server = await asyncio.start_server(
+            self._handle_http, host, port
+        )
+        bound = self._http_server.sockets[0].getsockname()[1]
+        self.metrics_addr = (host, bound)
+        return bound
 
     async def stop(self):
         """Stop the pump; any still-open request is cancelled (its
@@ -140,6 +199,10 @@ class AsyncServer:
             self.eng.cancel(req)
             self.metrics.inc("cancellations_shutdown")
         self._finalize_done()
+        if self._http_server is not None:
+            self._http_server.close()
+            await self._http_server.wait_closed()
+            self._http_server = None
 
     async def __aenter__(self):
         await self.start()
@@ -217,6 +280,9 @@ class AsyncServer:
                     req.done = True
                     req.finish_reason = "shed"
                     req.t_done = time.perf_counter()
+                    tracer = getattr(self.eng, "tracer", None)
+                    if tracer is not None:  # shed never reached submit;
+                        tracer.shed(req)    # open+close its timeline here
                     self.metrics.inc("sheds")
                     self.metrics.inc(f"shed_{e.reason}")
                     self._finalize(req)
@@ -335,6 +401,10 @@ class AsyncServer:
         except Exception:
             # Engine crash: never strand consumers — every open request
             # terminates with finish_reason="error" and its stream ends.
+            # The flight recorder (if any) freezes the last ticks for
+            # the post-mortem.
+            self._crashed = True
+            self._dump_recorder("pump_crash")
             for req in list(self._open.values()):
                 if not req.done:
                     req.done = True
@@ -352,3 +422,75 @@ class AsyncServer:
         collect_engine_metrics(self.eng, self.metrics)
         self.metrics.counters["watchdog_stalls"] = self.watchdog.stalls
         return self.metrics.snapshot()
+
+    def metrics_text(self) -> str:
+        """The /metrics body: a fresh Prometheus text exposition of the
+        full metrics surface + the frozen engine-config info gauge."""
+        collect_engine_metrics(self.eng, self.metrics)
+        self.metrics.counters["watchdog_stalls"] = self.watchdog.stalls
+        info = None
+        if hasattr(self.eng, "config_info"):
+            info = self.eng.config_info()
+        return render_prometheus(self.metrics, info=info)
+
+    def health(self) -> dict:
+        """The /healthz body. status "ok" while the pump is alive;
+        "crashed" (HTTP 503) once it died on an engine exception."""
+        pump_alive = (self._pump_task is not None
+                      and not self._pump_task.done())
+        status = "crashed" if self._crashed else (
+            "ok" if pump_alive or not self._running else "stopped"
+        )
+        return {
+            "status": status,
+            "pump_alive": pump_alive,
+            "queued": len(self.eng.sched.queue),
+            "live": len(self.eng.sched.live),
+            "open_streams": len(self._open),
+            "watchdog_stalls": self.watchdog.stalls,
+        }
+
+    # -- HTTP endpoints ----------------------------------------------------
+
+    async def _handle_http(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter):
+        """Minimal HTTP/1.1 responder for pull-based scraping — GET
+        /metrics and /healthz only, one request per connection (the
+        scrape pattern; no keep-alive, no external deps)."""
+        try:
+            request_line = await reader.readline()
+            parts = request_line.decode("latin-1", "replace").split()
+            path = parts[1] if len(parts) >= 2 else "/"
+            while True:  # drain headers
+                line = await reader.readline()
+                if line in (b"\r\n", b"\n", b""):
+                    break
+            route = path.split("?", 1)[0]
+            if route == "/metrics":
+                status, ctype = 200, CONTENT_TYPE
+                body = self.metrics_text()
+            elif route == "/healthz":
+                h = self.health()
+                status = 200 if h["status"] == "ok" else 503
+                ctype = "application/json"
+                body = json.dumps(h) + "\n"
+            else:
+                status, ctype = 404, "text/plain; charset=utf-8"
+                body = "not found\n"
+            data = body.encode("utf-8")
+            phrase = {200: "OK", 404: "Not Found",
+                      503: "Service Unavailable"}[status]
+            writer.write(
+                (f"HTTP/1.1 {status} {phrase}\r\n"
+                 f"Content-Type: {ctype}\r\n"
+                 f"Content-Length: {len(data)}\r\n"
+                 "Connection: close\r\n\r\n").encode("latin-1") + data
+            )
+            await writer.drain()
+        except (ConnectionError, asyncio.CancelledError):
+            pass
+        finally:
+            try:
+                writer.close()
+            except Exception:
+                pass

@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .sampling import finite_rows, spec_accept_tokens
+from .tracing import SPAN_DECODE_TICK, SPAN_SPEC_BURST
 
 
 class Drafter(Protocol):
@@ -280,7 +281,10 @@ class SpecDecoder:
                 eng._step[e.slot] += 1
                 emitted_total += 1
                 self.tokens_emitted += 1
-                if sched.record_token(e, tok):
+                finished = sched.record_token(e, tok)
+                if eng.tracer is not None:
+                    eng.tracer.span(e.req, SPAN_DECODE_TICK, token=tok)
+                if finished:
                     eng._retire_entry(e)
                 else:
                     self._pending[e.slot] = tok
@@ -362,6 +366,9 @@ class SpecDecoder:
             emitted_total += committed
             self.tokens_emitted += committed
             self.accepted += na
+            if eng.tracer is not None:
+                eng.tracer.span(e.req, SPAN_SPEC_BURST, drafted=m,
+                                accepted=na, committed=committed)
             if finished:
                 eng._retire_entry(e)  # drops the pending token too
             else:

@@ -259,11 +259,40 @@ def test_metrics_percentiles_and_merge():
     snap = m.snapshot()
     assert snap["a"] == 7  # merge overwrites (external owner)
     assert snap["x"]["count"] == 100
-    assert snap["x"]["p50"] == 50.0 and snap["x"]["p99"] == 99.0
+    # Nearest-rank: the ceil(q/100 * n)-th smallest (1-indexed). For
+    # 0..99, p50 is the 50th smallest = 49.0 (NOT 50.0 — the old
+    # implementation was off by one) and p99 the 99th = 98.0.
+    assert snap["x"]["p50"] == 49.0 and snap["x"]["p99"] == 98.0
+
+
+def test_percentile_nearest_rank_small_series():
+    """Regression for the nearest-rank off-by-one: pin exact values on
+    tiny series where the old `round()`-based rank visibly diverged."""
+    m = ServeMetrics()
+    m.observe("one", 5.0)
+    assert m.snapshot()["one"]["p50"] == 5.0
+    assert m.snapshot()["one"]["p99"] == 5.0
+    m2 = ServeMetrics()
+    for v in (1.0, 2.0):
+        m2.observe("two", v)
+    # ceil(0.5 * 2) = 1 -> the 1st smallest, not the 2nd
+    assert m2.snapshot()["two"]["p50"] == 1.0
+    assert m2.snapshot()["two"]["p99"] == 2.0
+    m3 = ServeMetrics()
+    for v in (1.0, 2.0, 3.0):
+        m3.observe("three", v)
+    assert m3.snapshot()["three"]["p50"] == 2.0  # ceil(1.5) = 2nd
+    assert m3.snapshot()["three"]["p99"] == 3.0
+    m4 = ServeMetrics()
+    for v in (10.0, 20.0, 30.0, 40.0):
+        m4.observe("four", v)
+    assert m4.snapshot()["four"]["p50"] == 20.0  # ceil(2.0) = 2nd
+    assert m4.snapshot()["four"]["p99"] == 40.0
 
 
 def test_watchdog_fires_once_per_stall_episode():
-    wd = Watchdog(stall_s=0.02)
+    fired = []
+    wd = Watchdog(stall_s=0.02, on_stall=fired.append)
     assert not wd.beat(progressed=True, pending=True)
     time.sleep(0.03)
     assert wd.beat(progressed=False, pending=True)  # stall fires
@@ -272,7 +301,27 @@ def test_watchdog_fires_once_per_stall_episode():
     time.sleep(0.03)
     assert wd.beat(progressed=False, pending=True)
     assert wd.stalls == 2
+    assert len(fired) == 2 and all(d >= 0.02 for d in fired)
+    assert wd.last_stall_s == fired[-1]
     # idle (nothing pending) never stalls
     wd2 = Watchdog(stall_s=0.01)
     time.sleep(0.02)
     assert not wd2.beat(progressed=False, pending=False)
+
+
+def test_watchdog_rearm_requires_progress_not_time():
+    """After a stall fires, more elapsed time alone must NOT re-fire —
+    only a progress beat rearms the edge trigger. And the progress beat
+    resets the stall clock: an immediately-following silent beat does
+    not fire until a full `stall_s` passes again."""
+    wd = Watchdog(stall_s=0.02)
+    time.sleep(0.03)
+    assert wd.beat(progressed=False, pending=True)
+    time.sleep(0.03)  # still stuck, even longer
+    assert not wd.beat(progressed=False, pending=True)  # no re-fire
+    assert wd.stalls == 1
+    assert not wd.beat(progressed=True, pending=True)  # progress: rearm
+    assert not wd.beat(progressed=False, pending=True)  # clock was reset
+    time.sleep(0.03)
+    assert wd.beat(progressed=False, pending=True)  # new episode fires
+    assert wd.stalls == 2
