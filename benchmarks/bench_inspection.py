@@ -34,12 +34,40 @@ def run():
     )["moe"]
     batch = data.batch(999)
     x = batch["patches"] @ state["params"]["patch_proj"]["w"]
-    stats = summarize(routing_stats(x, moe_params, cfg.moe))
+    stats = summarize(routing_stats(x, moe_params))
     for k in ("token_contribution_min", "token_contribution_max",
               "expert_importance_spread", "tokens_for_50pct_mean",
               "tokens_for_90pct_mean", "max_dispatch_weight",
               "max_combine_weight"):
         emit(f"fig9_inspection/{k}", 0.0, f"value={stats[k]:.3f}")
+
+    # serving-shape path: streamed softmax stats, no (m × S) weights —
+    # must agree with the dense oracle above wherever keys overlap
+    chunked = summarize(routing_stats(x, moe_params, method="chunked",
+                                      chunk_tokens=16))
+    worst = max(abs(chunked[k] - stats[k]) for k in chunked if k in stats)
+    assert worst < 1e-3, f"chunked inspection drifted from oracle: {worst}"
+    emit("fig9_inspection/chunked_vs_dense_max_abs_diff", 0.0,
+         f"value={worst:.2e}")
+
+    # Export the same stats through the serving metrics surface and
+    # round-trip the exposition: gauges set during warmup are wiped by
+    # reset_counters() so the scrape carries only final-state values.
+    from repro.serve import ServeMetrics, parse_prometheus, render_prometheus
+
+    metrics = ServeMetrics()
+    metrics.set_gauge("inspection_token_contribution_min", -1.0)  # warmup
+    metrics.reset_counters()
+    for k, v in stats.items():
+        metrics.set_gauge(f"inspection_{k}", float(v))
+    parsed = parse_prometheus(render_prometheus(metrics))
+    got = parsed["gauges"][
+        "repro_serve_inspection_token_contribution_min"][1]
+    want = float(stats["token_contribution_min"])
+    # the exposition renders 12 significant digits; f32 stats carry ~7
+    assert abs(got - want) <= 1e-9 * max(1.0, abs(want)), (
+        "inspection gauge did not survive the exporter round-trip"
+    )
 
 
 if __name__ == "__main__":

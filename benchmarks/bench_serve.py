@@ -36,6 +36,14 @@ rate, deadline-miss rate and queue-time percentiles are reported and
 the block pool is asserted leak-free afterwards — the CI chaos-smoke
 job greps these counters.
 
+A sixth phase exercises the MODEL-INTERIOR telemetry (serve/
+telemetry.py): token parity with the side outputs compiled in
+(asserted), roofline-vs-measured program efficiency attribution, and
+the batch-variance probe — target-row routing-stat divergence solo vs
+co-batched, finite on a group-routed BPR sparse-MoE reference and ~0
+on row-independent routing (the ROADMAP batch-invariant-serving
+acceptance instrument).
+
 Emits `name,us_per_call,derived` rows (benchmarks/common.py contract),
 a human-readable summary, AND machine-readable ``BENCH_serve.json`` at
 the repo root. The JSON keeps the latest-run summary at the top level
@@ -498,6 +506,110 @@ def bench_async_overload(cfg, params, batch, max_len, block_size,
     }
 
 
+def bench_telemetry(cfg, params, batch, max_len, smoke: bool):
+    """Model-interior telemetry phase (docs/observability.md):
+
+    1. Serve the same greedy trace with telemetry OFF and ON — the token
+       streams must be identical (the side outputs are stop_gradient'd
+       stats, never part of the sampled path) and the decode program must
+       not recompile. Reports the per-phase routing-health/numerics gauge
+       count and the roofline-vs-measured program efficiency attribution
+       (timers reset post-warmup so compile time is not attributed).
+    2. The batch-variance probe on a group-routed BPR sparse-MoE
+       reference (capacity competition reaches the target row — finite
+       divergence expected) and on this bench's arch as configured
+       (row-independent routing — ~0 expected)."""
+    import dataclasses
+
+    from repro.models import lm_init as _lm_init
+    from repro.serve import ServeMetrics, batch_variance_probe
+
+    budget = 6 if smoke else 12
+
+    def serve(telem):
+        eng = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                          telemetry=telem)
+        eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=2))
+        eng.run()  # compile warmup outside the attributed window
+        for t in getattr(eng, "_timers", {}).values():
+            t.reset()
+        warm_sizes = eng.jit_cache_sizes()
+        reqs = [Request(prompt=[(i + 1) * 7 % 200 + 1] * 8,
+                        max_new_tokens=budget) for i in range(batch)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        assert eng.jit_cache_sizes() == warm_sizes, (
+            "telemetry variant recompiled under churn"
+        )
+        return eng, [r.out for r in reqs]
+
+    _, toks_off = serve(False)
+    eng_on, toks_on = serve(True)
+    assert toks_on == toks_off, (
+        "telemetry side outputs changed the served tokens"
+    )
+
+    # Post-warmup metrics surface: warm it with a throwaway gauge, then
+    # reset_counters() so only the measured run's gauges are exported.
+    metrics = ServeMetrics()
+    metrics.set_gauge("warmup_marker", 1.0)
+    metrics.reset_counters()
+    metrics.merge_gauges(eng_on.telemetry.gauges())
+    eff = eng_on.program_efficiency()
+    for program, ratio in eff.items():
+        metrics.set_gauge("program_efficiency", ratio, program=program)
+    snap = eng_on.telemetry_snapshot()
+    n_gauges = sum(len(v) for v in snap.values())
+    eff_s = " ".join(f"{k}={v:.2e}" for k, v in sorted(eff.items()))
+    print(f"telemetry     parity OK ({sum(map(len, toks_on))} tok) | "
+          f"{n_gauges} gauges over {sorted(snap)} | efficiency {eff_s}")
+
+    # Batch-variance probe. The group-routed reference needs BPR +
+    # binding capacity so fillers can evict the target row (positional
+    # priority always favors row 0 — see batch_variance_probe docstring).
+    ref = reduced(get_config("granite-moe-1b-a400m"))
+    ref = dataclasses.replace(ref, moe=dataclasses.replace(
+        ref.moe, group_size=batch, capacity_factor=0.5, bpr=True))
+    ref_params = _lm_init(jax.random.PRNGKey(0), ref)
+    # 8 probe tokens even in smoke: capacity eviction of the target row
+    # often first bites a few steps in, and the reference model is tiny.
+    probe_kw = dict(batch_size=batch, max_new_tokens=8,
+                    max_len=min(max_len, 64))
+    grouped = batch_variance_probe(ref, ref_params, [1, 2, 3, 4],
+                                   **probe_kw)
+    own = batch_variance_probe(cfg, params, [1, 2, 3, 4], **probe_kw)
+    print(f"batch-variance probe: group-routed BPR sparse divergence "
+          f"{grouped['divergence']:.3e} over {grouped['steps_compared']} "
+          f"steps | {cfg.name if hasattr(cfg, 'name') else 'bench arch'} "
+          f"divergence {own['divergence']:.3e}")
+    emit("serve_batch_variance_grouped", max(grouped["divergence"], 1e-12)
+         * 1e6, "group-routed BPR sparse reference")
+    emit("serve_batch_variance_own", max(own["divergence"], 1e-12) * 1e6,
+         "bench arch as configured")
+    return {
+        "parity": True,
+        "phases": sorted(snap),
+        "gauge_count": int(n_gauges),
+        "program_efficiency": {k: float(v) for k, v in eff.items()},
+        "decode_sample": {
+            k: round(float(v), 6)
+            for k, v in sorted(snap.get("decode", {}).items())[:8]
+        },
+        "batch_variance": {
+            "grouped_bpr_sparse": {
+                "divergence": float(grouped["divergence"]),
+                "steps_compared": int(grouped["steps_compared"]),
+            },
+            "bench_arch": {
+                "divergence": float(own["divergence"]),
+                "steps_compared": int(own["steps_compared"]),
+            },
+        },
+        "exported_gauges": len(metrics.gauges),
+    }
+
+
 def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
               rate=8.0, smoke=False, block_size=16, num_blocks=None):
     cfg = reduced(get_config(arch))
@@ -570,6 +682,7 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
     )
     overload = bench_async_overload(cfg, params, batch, max_len,
                                     block_size, smoke)
+    telemetry = bench_telemetry(cfg, params, batch, max_len, smoke)
 
     speedup = results["continuous"]["tok_s"] / max(
         results["wave"]["tok_s"], 1e-9
@@ -604,6 +717,7 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
         "paged_attention_kernel": paged_kernel,
         "spec_decode": spec,
         "async_overload": overload,
+        "telemetry": telemetry,
         # Frozen engine config of the overload engine — the same labels
         # the exporter serves as the `repro_serve_engine_info` gauge.
         "engine_info": overload["engine_info"],
@@ -644,6 +758,16 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
         "deadline_miss_rate": round(overload["deadline_miss_rate"], 3),
         "exporter_metrics": (overload["exporter_counters"]
                              + overload["exporter_histograms"]),
+        # Roofline-vs-measured attribution + the batch-variance probe:
+        # the trajectory of these is the point (drift in efficiency or a
+        # group-routed divergence change is a behavior change, not noise).
+        "decode_efficiency": round(
+            telemetry["program_efficiency"].get("decode", 0.0), 6),
+        "batch_variance_grouped": round(
+            telemetry["batch_variance"]["grouped_bpr_sparse"]["divergence"],
+            6),
+        "batch_variance_own": round(
+            telemetry["batch_variance"]["bench_arch"]["divergence"], 6),
     })
     payload["history"] = history
     with open(json_path, "w") as f:
@@ -700,6 +824,15 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
                 f"async overload phase failed to overload "
                 f"(sheds={overload['sheds']}, "
                 f"deadline_misses={overload['deadline_misses']})"
+            )
+        # The probe must read finite on the group-routed BPR reference —
+        # a zero there means capacity competition never reached the
+        # target row and the instrument is dead.
+        tv = telemetry["batch_variance"]
+        if tv["grouped_bpr_sparse"]["divergence"] <= 0.0:
+            raise SystemExit(
+                "batch-variance probe read 0 on the group-routed BPR "
+                "sparse reference"
             )
     return payload
 

@@ -20,7 +20,11 @@ snapshot prints the counters the chaos harness and bench assert on.
 (serve/tracing.py) and prints each request's timeline plus a text
 Gantt; ``--metrics-port`` binds the Prometheus /metrics + /healthz
 endpoints (0 = pick an ephemeral port) and scrapes /metrics once at
-the end."""
+the end; ``--telemetry`` compiles the model-interior telemetry
+variants (serve/telemetry.py) and prints the per-layer routing-health
+table plus the roofline-vs-measured program-efficiency gauges
+(docs/observability.md — try ``--arch granite-moe-1b-a400m`` for the
+MoE stats)."""
 import argparse
 import asyncio
 import sys
@@ -88,6 +92,41 @@ def print_timelines(reqs):
     print(render_timeline(reqs))
 
 
+def print_telemetry(eng):
+    """Per-layer routing-health table + program-efficiency gauges, from
+    the device-side stats the telemetry program variants emit."""
+    snap = eng.telemetry_snapshot()
+    for phase in sorted(snap):
+        flat = snap[phase]
+        # moe_l<idx>_<stat> -> {layer: {stat: value}}
+        layers = {}
+        rest = {}
+        for k, v in sorted(flat.items()):
+            if k.startswith("moe_l"):
+                lid, stat = k[len("moe_l"):].split("_", 1)
+                layers.setdefault(int(lid), {})[stat] = v
+            else:
+                rest[k] = v
+        print(f"\nmodel-interior telemetry [{phase}]:")
+        if layers:
+            stats = sorted({s for d in layers.values() for s in d})
+            head = " ".join(f"{s[:16]:>16}" for s in stats)
+            print(f"  {'layer':>5} {head}")
+            for lid in sorted(layers):
+                row = " ".join(f"{layers[lid].get(s, float('nan')):16.4g}"
+                               for s in stats)
+                print(f"  {lid:>5} {row}")
+        for k, v in rest.items():
+            print(f"  {k}: {v:.6g}")
+    eff = eng.program_efficiency()
+    if eff:
+        print("\nroofline-vs-measured program efficiency "
+              "(bound / measured mean wall; 1.0 = at the roofline "
+              "bound on the target accelerator):")
+        for program, ratio in sorted(eff.items()):
+            print(f"  {program:>14}: {ratio:.3e}")
+
+
 async def run(args):
     cfg = reduced(get_config(args.arch))
     params = lm_init(jax.random.PRNGKey(0), cfg)
@@ -96,6 +135,7 @@ async def run(args):
         backend="paged" if args.paged else "contiguous",
         trace=args.trace,
         flight_recorder=64 if args.trace else 0,
+        telemetry=args.telemetry,
     )
     scfg = ServerConfig(max_queue=args.max_queue,
                         metrics_port=args.metrics_port)
@@ -124,6 +164,8 @@ async def run(args):
         if eng.recorder is not None and eng.recorder.ticks:
             print("\nflight recorder (last ticks):")
             print(eng.recorder.render(6))
+    if args.telemetry:
+        print_telemetry(eng)
     if prom is not None:
         head = prom.splitlines()[:12]
         print("\n/metrics scrape (first lines):")
@@ -147,6 +189,9 @@ def main():
                     help="clients abandon their stream after N tokens")
     ap.add_argument("--trace", action="store_true",
                     help="per-request span timelines + flight recorder")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="model-interior telemetry: per-layer routing "
+                         "health + program-efficiency gauges")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="bind /metrics + /healthz (0 = ephemeral port)")
     asyncio.run(run(ap.parse_args()))

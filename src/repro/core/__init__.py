@@ -39,13 +39,21 @@ def moe_init(rng, d_model: int, moe_cfg, style: str = "gated"):
 
 
 def moe_apply(params, moe_cfg, x, act: str = "silu",
-              use_kernel: bool = False):
+              use_kernel: bool = False, telemetry: bool = False):
+    """``telemetry=True`` (a static build flag, never a traced value) adds
+    a ``metrics["telemetry"]`` dict of stop_gradient'd routing-health
+    scalars on the soft / tokens_choice / experts_choice variants — the
+    output ``y`` is unchanged. Ablation variants have no router to probe
+    and ignore the flag."""
     if moe_cfg.variant == "soft":
-        return soft_moe_apply(params, moe_cfg, x, act, use_kernel=use_kernel)
+        return soft_moe_apply(params, moe_cfg, x, act, use_kernel=use_kernel,
+                              telemetry=telemetry)
     if moe_cfg.variant in _ABLATIONS:
         return ablation_apply(params, moe_cfg, x, act)
     if moe_cfg.variant == "tokens_choice":
-        return tokens_choice_apply(params, moe_cfg, x, act)
+        return tokens_choice_apply(params, moe_cfg, x, act,
+                                   telemetry=telemetry)
     if moe_cfg.variant == "experts_choice":
-        return experts_choice_apply(params, moe_cfg, x, act)
+        return experts_choice_apply(params, moe_cfg, x, act,
+                                    telemetry=telemetry)
     raise ValueError(f"unknown MoE variant {moe_cfg.variant!r}")

@@ -7,6 +7,21 @@ dispatch/combine weights.
     normalized by its min (Fig. 9 middle: 3–14× spread across experts).
   * cumulative_slot_weight — how many tokens cover a given fraction of a
     slot's dispatch mass (Fig. 9 right / App. G cumulative curves).
+
+Two paths compute the same statistics:
+
+  * ``method="dense"`` — materializes the (b, m, n·p) weight tensors via
+    ``soft_moe_weights``. The oracle: exact, simple, but O(b·m·S) memory,
+    so it only runs at offline/figure shapes.
+  * ``method="chunked"`` — streams token chunks against per-slot /
+    per-token online-softmax ``(max, denom)`` stats (the same residuals
+    the Pallas kernels save), so memory is O(chunk·S) and inspection runs
+    at serving shapes. ``tokens_for_*pct`` needs a full sort over tokens
+    per slot and is dense-only.
+
+``routing_health_from_stats`` is the chunked jnp twin of
+``kernels.ops.routing_health`` (the Pallas reduction the serving
+telemetry uses) — tests pin all three against each other.
 """
 from __future__ import annotations
 
@@ -14,11 +29,89 @@ from typing import Dict
 
 import jax.numpy as jnp
 
+from ..layers.common import l2_normalize
 from .soft_moe import soft_moe_weights
 
 
-def routing_stats(x, params, moe_cfg) -> Dict[str, jnp.ndarray]:
-    """x: (b, m, d); params: a Soft-MoE layer's params."""
+def streaming_softmax_stats(x, phi_n, chunk_tokens: int = 512):
+    """Per-slot dispatch and per-token combine (max, denom) softmax stats,
+    streamed over token chunks — never an (m × S) tensor.
+
+    x: (b, m, d) raw tokens; phi_n: (d, S) pre-normalized (scale folded
+    in). Returns ``((d_mx, d_den) each (b, S), (c_mx, c_den) each (b, m))``
+    matching ``kernels.soft_moe_kernels.routing_fwd_pallas``'s stats.
+    """
+    b, m, d = x.shape
+    s = phi_n.shape[1]
+    xn = l2_normalize(x, axis=-1).astype(jnp.float32)
+    phi_n = phi_n.astype(jnp.float32)
+    chunk = min(chunk_tokens or m, m)
+    d_mx = jnp.full((b, s), -jnp.inf, jnp.float32)
+    d_den = jnp.zeros((b, s), jnp.float32)
+    c_mx_parts, c_den_parts = [], []
+    for i in range(0, m, chunk):
+        lg = jnp.einsum("bmd,ds->bms", xn[:, i:i + chunk], phi_n)
+        # combine direction is self-contained per token row
+        cm = lg.max(-1)
+        c_mx_parts.append(cm)
+        c_den_parts.append(jnp.exp(lg - cm[..., None]).sum(-1))
+        # dispatch direction: online (max, denom) update per slot column
+        mx_new = jnp.maximum(d_mx, lg.max(1))
+        d_den = d_den * jnp.exp(d_mx - mx_new) + jnp.exp(
+            lg - mx_new[:, None, :]).sum(1)
+        d_mx = mx_new
+    return ((d_mx, d_den),
+            (jnp.concatenate(c_mx_parts, 1), jnp.concatenate(c_den_parts, 1)))
+
+
+def routing_health_from_stats(x, phi_n, d_stats, c_stats,
+                              chunk_tokens: int = 512):
+    """Chunked jnp twin of ``kernels.ops.routing_health``.
+
+    Recomputes logits chunk-wise against the saved ``(max, denom)`` stats
+    and reduces to ``(disp_entropy (b, S), importance (b, S),
+    comb_entropy (b, m), token_contrib (b, m))``.
+    """
+    b, m, d = x.shape
+    s = phi_n.shape[1]
+    d_mx, d_den = d_stats
+    c_mx, c_den = c_stats
+    xn = l2_normalize(x, axis=-1).astype(jnp.float32)
+    phi_n = phi_n.astype(jnp.float32)
+    chunk = min(chunk_tokens or m, m)
+    dent = jnp.zeros((b, s), jnp.float32)
+    imp = jnp.zeros((b, s), jnp.float32)
+    cent_parts, contrib_parts = [], []
+    log_dden = jnp.log(d_den.astype(jnp.float32))
+    for i in range(0, m, chunk):
+        lg = jnp.einsum("bmd,ds->bms", xn[:, i:i + chunk], phi_n)
+        ln_d = lg - d_mx[:, None, :].astype(jnp.float32) - log_dden[:, None]
+        d_w = jnp.exp(ln_d)
+        dent = dent - jnp.sum(d_w * ln_d, axis=1)
+        contrib_parts.append(d_w.sum(-1))
+        cm = c_mx[:, i:i + chunk].astype(jnp.float32)
+        cd = c_den[:, i:i + chunk].astype(jnp.float32)
+        ln_c = lg - cm[..., None] - jnp.log(cd)[..., None]
+        c_w = jnp.exp(ln_c)
+        cent_parts.append(-jnp.sum(c_w * ln_c, axis=-1))
+        imp = imp + c_w.sum(1)
+    return (dent, imp, jnp.concatenate(cent_parts, 1),
+            jnp.concatenate(contrib_parts, 1))
+
+
+def routing_stats(x, params, method: str = "dense",
+                  chunk_tokens: int = 512) -> Dict[str, jnp.ndarray]:
+    """x: (b, m, d); params: a Soft-MoE layer's params.
+
+    ``method="dense"`` is the (b, m, n·p)-materializing oracle;
+    ``method="chunked"`` computes the same statistics from streamed
+    softmax stats at O(chunk·S) memory (serving shapes), minus the
+    sort-based ``tokens_for_*pct`` curves.
+    """
+    if method == "chunked":
+        return _routing_stats_chunked(x, params, chunk_tokens)
+    if method != "dense":
+        raise ValueError(f"unknown routing_stats method {method!r}")
     d_w, c_w = soft_moe_weights(x, params["phi"], params["scale"])
     b, m, n, p = d_w.shape
     d_flat = d_w.reshape(b, m, n * p)
@@ -29,6 +122,11 @@ def routing_stats(x, params, moe_cfg) -> Dict[str, jnp.ndarray]:
     expert_importance = expert_importance / jnp.maximum(
         expert_importance.min(axis=-1, keepdims=True), 1e-9
     )
+
+    def _ent(w, axis):
+        return -jnp.sum(
+            jnp.where(w > 0, w * jnp.log(jnp.clip(w, 1e-30)), 0.0), axis=axis
+        )
 
     # cumulative dispatch: sort each slot's weights desc, cumsum over tokens
     sorted_w = -jnp.sort(-d_flat, axis=1)  # (b, m, S) desc over tokens
@@ -48,6 +146,33 @@ def routing_stats(x, params, moe_cfg) -> Dict[str, jnp.ndarray]:
         "tokens_for_90pct": tokens_to_cover(0.9),
         "max_dispatch_weight": d_w.max(),
         "max_combine_weight": c_w.max(),
+        "dispatch_entropy": _ent(d_flat, 1).mean(),
+        "combine_entropy": _ent(c_flat, 2).mean(),
+    }
+
+
+def _routing_stats_chunked(x, params, chunk_tokens: int) -> Dict[str, jnp.ndarray]:
+    from ..kernels import ref
+
+    d = params["phi"].shape[0]
+    phi_n = ref.normalized_phi(params["phi"].reshape(d, -1), params["scale"])
+    d_stats, c_stats = streaming_softmax_stats(x, phi_n, chunk_tokens)
+    dent, imp, cent, contrib = routing_health_from_stats(
+        x, phi_n, d_stats, c_stats, chunk_tokens)
+    expert_importance = imp / jnp.maximum(
+        imp.min(axis=-1, keepdims=True), 1e-9)
+    return {
+        "token_contribution": contrib,
+        "token_contribution_max": contrib.max(),
+        "token_contribution_min": contrib.min(),
+        "expert_importance": expert_importance,
+        "expert_importance_spread": expert_importance.max(-1).mean(),
+        # max softmax weight per column/row falls out of the saved stats:
+        # exp(mx − mx)/den = 1/den
+        "max_dispatch_weight": (1.0 / d_stats[1]).max(),
+        "max_combine_weight": (1.0 / c_stats[1]).max(),
+        "dispatch_entropy": dent.mean(),
+        "combine_entropy": cent.mean(),
     }
 
 

@@ -63,12 +63,19 @@ def soft_moe_weights(x, phi, scale, normalize: bool = True):
 
 
 def soft_moe_apply(params, moe_cfg, x, act: str = "silu",
-                   use_kernel: bool = False):
-    """x: (b, m, d) -> (b, m, d). Returns (y, metrics)."""
+                   use_kernel: bool = False, telemetry: bool = False):
+    """x: (b, m, d) -> (b, m, d). Returns (y, metrics).
+
+    ``telemetry=True`` adds a ``metrics["telemetry"]`` dict of
+    ``stop_gradient``'d f32 scalars — the Fig. 9 routing-health set (see
+    docs/observability.md). It never changes ``y``: the kernel path reads
+    the routing pass's saved softmax stats (plus one extra logits pass in
+    ``routing_health``) instead of materializing the (m × S) weights.
+    """
     b, m, d = x.shape
     n, p = moe_cfg.num_experts, moe_cfg.slots_per_expert
     phi = params["phi"]
-    c_weights = c_stats = None
+    c_weights = c_stats = d_w = d_stats = None
     if use_kernel:
         from ..kernels import ops as kops
         from ..kernels.tuning import config_from_moe
@@ -76,7 +83,11 @@ def soft_moe_apply(params, moe_cfg, x, act: str = "silu",
         kcfg = config_from_moe(moe_cfg, m=m, d=d)
         phi_n = kops.normalized_phi(phi, params["scale"])
         # one logits pass: dispatched slots + the combine softmax stats
-        slots, c_stats = kops.soft_moe_routing(x, phi_n, config=kcfg)
+        if telemetry:
+            slots, d_stats, c_stats = kops.soft_moe_routing(
+                x, phi_n, config=kcfg, with_d_stats=True)
+        else:
+            slots, c_stats = kops.soft_moe_routing(x, phi_n, config=kcfg)
         slots = slots.reshape(b, n, p, d)  # (b, n·p, d) -> (b, n, p, d)
     else:
         d_w, c_weights = soft_moe_weights(x, phi, params["scale"])
@@ -124,4 +135,57 @@ def soft_moe_apply(params, moe_cfg, x, act: str = "silu",
         metrics["max_combine"] = jax.lax.stop_gradient(
             (1.0 / c_stats[1]).max()
         )
+    if telemetry:
+        if use_kernel:
+            sg = jax.lax.stop_gradient
+            dent, imp, cent, contrib = kops.routing_health(
+                sg(x), sg(phi_n), jax.tree_util.tree_map(sg, d_stats),
+                jax.tree_util.tree_map(sg, c_stats), config=kcfg)
+            max_dispatch = (1.0 / d_stats[1]).max()
+        else:
+            dent, imp, cent, contrib = _dense_routing_health(d_w, c_weights)
+            max_dispatch = d_w.max()
+        imp_e = imp.reshape(b, n, p).sum(axis=(0, 2))  # per-expert mass
+        metrics["telemetry"] = jax.tree_util.tree_map(
+            jax.lax.stop_gradient,
+            {
+                "max_combine": metrics["max_combine"],
+                "max_dispatch": max_dispatch.astype(jnp.float32),
+                "dispatch_entropy": dent.mean().astype(jnp.float32),
+                "combine_entropy": cent.mean().astype(jnp.float32),
+                "expert_importance_spread": (
+                    imp_e.max() / jnp.clip(imp_e.min(), 1e-9)
+                ).astype(jnp.float32),
+                "token_contribution_min": contrib.min().astype(jnp.float32),
+                "token_contribution_max": contrib.max().astype(jnp.float32),
+                # per-sequence rows (b,) for the batch-variance probe:
+                # Soft-MoE softmaxes are per-row, so these should NOT move
+                # with batch composition — the probe's null hypothesis
+                "rows": {
+                    "dispatch_entropy": dent.mean(axis=1).astype(
+                        jnp.float32),
+                    "combine_entropy": cent.mean(axis=1).astype(jnp.float32),
+                    "token_contribution_min": contrib.min(axis=1).astype(
+                        jnp.float32),
+                },
+            },
+        )
     return y, metrics
+
+
+def _dense_routing_health(d_w, c_weights):
+    """Dense oracle for the kernel's routing_health reductions.
+
+    d_w/c_weights: (b, m, n, p) softmax weights. Returns the same
+    (disp_entropy (b, S), importance (b, S), comb_entropy (b, m),
+    token_contrib (b, m)) tuple as ``kernels.ops.routing_health``.
+    """
+    b, m, n, p = d_w.shape
+    d_flat = d_w.reshape(b, m, n * p)
+    c_flat = c_weights.reshape(b, m, n * p)
+
+    def _ent(w, axis):
+        return -jnp.sum(jnp.where(w > 0, w * jnp.log(jnp.clip(w, 1e-30)),
+                                  0.0), axis=axis)
+
+    return (_ent(d_flat, 1), c_flat.sum(1), _ent(c_flat, 2), d_flat.sum(2))

@@ -54,10 +54,31 @@ def _aux_losses(logits, probs, expert_index, num_experts, moe_cfg):
     )
 
 
-def tokens_choice_apply(params, moe_cfg, x, act: str = "silu"):
+def _router_telemetry(probs):
+    """ST-MoE-style router health: per-token entropy and confidence.
+    Returns (scalar dict, per-token entropy (g, t)) — callers derive
+    per-sequence rows from the entropy."""
+    ent = -jnp.sum(
+        jnp.where(probs > 0, probs * jnp.log(jnp.clip(probs, 1e-30)), 0.0),
+        axis=-1,
+    )
+    return {
+        "router_entropy": ent.mean().astype(jnp.float32),
+        "max_router_prob": probs.max().astype(jnp.float32),
+    }, ent
+
+
+def tokens_choice_apply(params, moe_cfg, x, act: str = "silu",
+                        telemetry: bool = False):
     """Top-K token-choice routing. x: (b, m, d). Groups of `group_size`
     sequences route together (paper §3.5: tokens in a group compete for
-    expert buffer slots — the source of batch effects Soft MoE avoids)."""
+    expert buffer slots — the source of batch effects Soft MoE avoids).
+
+    ``telemetry=True`` adds ``metrics["telemetry"]``: router
+    entropy/confidence, per-expert load spread over the *kept* choices,
+    and the kept fraction — all ``stop_gradient``'d f32 scalars, no effect
+    on ``y``.
+    """
     b, m, d = x.shape
     gs = max(1, min(moe_cfg.group_size, b))
     g = b // gs
@@ -130,10 +151,35 @@ def tokens_choice_apply(params, moe_cfg, x, act: str = "silu"):
     aux = _aux_losses(logits, probs, expert_index, e, moe_cfg)
     dropped = 1.0 - keep.any(axis=-1).mean()  # fully-dropped token fraction
     metrics = {"moe_aux_loss": aux, "dropped_fraction": dropped}
+    if telemetry:
+        # per-expert load over KEPT (token, choice) assignments — the
+        # capacity-competition outcome the batch-variance probe watches
+        load = (jax.nn.one_hot(expert_index, e) * keep[..., None]).sum(
+            axis=(0, 1, 2))  # (e,)
+        scalars, ent = _router_telemetry(probs)
+        metrics["telemetry"] = jax.tree_util.tree_map(
+            jax.lax.stop_gradient,
+            {
+                **scalars,
+                "expert_load_spread": load.max() / jnp.clip(load.min(), 1e-9),
+                "kept_fraction": keep.mean().astype(jnp.float32),
+                "dropped_fraction": dropped.astype(jnp.float32),
+                # per-sequence rows (b,): the batch-variance probe compares
+                # the target row solo vs co-batched; kept_fraction is where
+                # group-routed capacity competition shows up
+                "rows": {
+                    "router_entropy": ent.reshape(g, gs, m).mean(
+                        axis=2).reshape(b).astype(jnp.float32),
+                    "kept_fraction": keep.reshape(g, gs, m, k).mean(
+                        axis=(2, 3)).reshape(b).astype(jnp.float32),
+                },
+            },
+        )
     return y, metrics
 
 
-def experts_choice_apply(params, moe_cfg, x, act: str = "silu"):
+def experts_choice_apply(params, moe_cfg, x, act: str = "silu",
+                         telemetry: bool = False):
     """Experts-Choice routing: each expert takes its top-C tokens."""
     b, m, d = x.shape
     gs = max(1, min(moe_cfg.group_size, b))
@@ -172,4 +218,23 @@ def experts_choice_apply(params, moe_cfg, x, act: str = "silu"):
         "moe_aux_loss": aux,
         "dropped_fraction": 1.0 - selected.mean(),
     }
+    if telemetry:
+        # expert load is uniform by construction (each expert takes exactly
+        # `capacity` tokens); token coverage is the health signal instead.
+        scalars, ent = _router_telemetry(probs)
+        metrics["telemetry"] = jax.tree_util.tree_map(
+            jax.lax.stop_gradient,
+            {
+                **scalars,
+                "kept_fraction": selected.mean().astype(jnp.float32),
+                "dropped_fraction": (1.0 - selected.mean()).astype(
+                    jnp.float32),
+                "rows": {
+                    "router_entropy": ent.reshape(g, gs, m).mean(
+                        axis=2).reshape(b).astype(jnp.float32),
+                    "kept_fraction": selected.astype(jnp.float32).reshape(
+                        g, gs, m).mean(axis=2).reshape(b),
+                },
+            },
+        )
     return y, metrics

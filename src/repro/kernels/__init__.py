@@ -13,6 +13,7 @@ from .soft_moe_kernels import (  # noqa: F401
     dispatch_bwd_pallas,
     dispatch_pallas,
     routing_fwd_pallas,
+    routing_health_pallas,
 )
 from .tuning import (  # noqa: F401
     KernelConfig,

@@ -37,6 +37,7 @@ from .soft_moe_kernels import (
     combine_online_pallas,
     dispatch_bwd_pallas,
     routing_fwd_pallas,
+    routing_health_pallas,
 )
 from .tuning import KernelConfig, backend_is_tpu, default_config
 
@@ -58,18 +59,18 @@ def _resolve(config: Optional[KernelConfig], m: int, d: int,
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _routing(cfg: KernelConfig, x, phi_n):
-    slots, _d_stats, c_stats = routing_fwd_pallas(x, phi_n, cfg)
-    return slots, c_stats[0], c_stats[1]
+    slots, d_stats, c_stats = routing_fwd_pallas(x, phi_n, cfg)
+    return slots, d_stats[0], d_stats[1], c_stats[0], c_stats[1]
 
 
 def _routing_fwd(cfg, x, phi_n):
     slots, (d_mx, d_den), (c_mx, c_den) = routing_fwd_pallas(x, phi_n, cfg)
-    return (slots, c_mx, c_den), (x, phi_n, slots, d_mx, d_den)
+    return (slots, d_mx, d_den, c_mx, c_den), (x, phi_n, slots, d_mx, d_den)
 
 
 def _routing_bwd(cfg, res, g):
     x, phi_n, slots, d_mx, d_den = res
-    g_slots, _g_cmx, _g_cden = g  # stats cotangents are identically zero
+    g_slots = g[0]  # all four stats cotangents are identically zero
     dx, dphi = dispatch_bwd_pallas(x, phi_n, g_slots, (d_mx, d_den), slots,
                                    cfg)
     return dx, dphi
@@ -78,19 +79,41 @@ def _routing_bwd(cfg, res, g):
 _routing.defvjp(_routing_fwd, _routing_bwd)
 
 
-def soft_moe_routing(x, phi_n, config: Optional[KernelConfig] = None
-                     ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+def soft_moe_routing(x, phi_n, config: Optional[KernelConfig] = None,
+                     *, with_d_stats: bool = False):
     """x: (b, m, d); phi_n: (d, S) pre-normalized.
 
     Returns ``(slots, (c_mx, c_den))``: the dispatched slots (b, S, d) and
     the combine-direction softmax stats (each (b, m)) from the same logits
     pass — hand the stats to :func:`soft_moe_combine` to skip its online
     rescan, and derive the ``max_combine`` metric as ``1 / c_den``.
+
+    ``with_d_stats=True`` additionally returns the dispatch-direction
+    per-slot stats: ``(slots, (d_mx, d_den), (c_mx, c_den))``. Both stats
+    pairs carry zero cotangents (telemetry/inspection consumers wrap them
+    in ``stop_gradient`` anyway); the routing gradient is unchanged.
     """
     b, m, d = x.shape
     cfg = _resolve(config, m, d, phi_n.shape[1])
-    slots, c_mx, c_den = _routing(cfg, x, phi_n)
+    slots, d_mx, d_den, c_mx, c_den = _routing(cfg, x, phi_n)
+    if with_d_stats:
+        return slots, (d_mx, d_den), (c_mx, c_den)
     return slots, (c_mx, c_den)
+
+
+def routing_health(x, phi_n, d_stats, c_stats,
+                   config: Optional[KernelConfig] = None):
+    """Fig. 9 routing-health reductions from the saved softmax stats.
+
+    Thin wrapper over :func:`routing_health_pallas`; returns
+    ``(disp_entropy (b, S), importance (b, S), comb_entropy (b, m),
+    token_contrib (b, m))``. See
+    ``core.inspection.routing_health_from_stats`` for the chunked jnp
+    equivalent (the oracle used in tests).
+    """
+    b, m, d = x.shape
+    cfg = _resolve(config, m, d, phi_n.shape[1])
+    return routing_health_pallas(x, phi_n, d_stats, c_stats, cfg)
 
 
 def soft_moe_dispatch(x, phi_n, config: Optional[KernelConfig] = None):

@@ -224,6 +224,128 @@ def routing_fwd_pallas(x, phi_n, cfg: KernelConfig = KernelConfig()):
 
 
 # ---------------------------------------------------------------------------
+# routing health: Fig. 9 statistics from the saved softmax stats
+# ---------------------------------------------------------------------------
+
+
+def _routing_health_kernel(x_ref, phi_ref, dmx_ref, dden_ref, cmx_ref,
+                           cden_ref, dent_ref, imp_ref, cent_ref,
+                           contrib_ref, dent_acc, imp_acc, cent_all,
+                           contrib_all, *, m_valid, s_valid, bt, bs, dt):
+    js, jt = pl.program_id(1), pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(jt == 0)
+    def _init_slot_block():
+        dent_acc[...] = jnp.zeros_like(dent_acc)
+        imp_acc[...] = jnp.zeros_like(imp_acc)
+
+    tok = pl.ds(jt * bt, bt)
+
+    @pl.when(js == 0)
+    def _init_token_acc():
+        cent_all[tok] = jnp.zeros((bt,), dt)
+        contrib_all[tok] = jnp.zeros((bt,), dt)
+
+    _x, _xn, logits = _logits_tile(x_ref, phi_ref, dt)
+    row = jt * bt + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+    col = js * bs + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    valid_col = col < s_valid
+    lg_d = jnp.where(row < m_valid, logits, _NEG)
+    lg_c = jnp.where(valid_col, logits, _NEG)
+
+    # dispatch direction: exact weights from the saved per-slot (max, denom)
+    # — log-weights come straight from the shifted logits, so the w·log w
+    # entropy terms never take log(0) (masked entries: w = exp(-1e30) = 0
+    # times a finite shifted logit). Pad-slot columns carry garbage weights
+    # (their stats are (0, 1) padding); they are masked out of the
+    # token-contribution row sums and sliced off the per-slot outputs.
+    ln_d = lg_d - dmx_ref[0][None, :] - jnp.log(dden_ref[0])[None, :]
+    d_w = jnp.exp(ln_d)
+    dent_acc[...] = dent_acc[...] - jnp.sum(d_w * ln_d, axis=0)
+    contrib_new = contrib_all[tok] + jnp.sum(
+        jnp.where(valid_col, d_w, 0.0), axis=1)
+    contrib_all[tok] = contrib_new
+    contrib_ref[0] = contrib_new.astype(contrib_ref.dtype)
+
+    # combine direction: per-token entropy (full-length scratch, written out
+    # every visit — last write wins, same as the fwd kernel's stats) and
+    # per-slot importance (pad-token rows masked out of the column sums).
+    ln_c = lg_c - cmx_ref[0][:, None] - jnp.log(cden_ref[0])[:, None]
+    c_w = jnp.exp(ln_c)
+    cent_new = cent_all[tok] - jnp.sum(c_w * ln_c, axis=1)
+    cent_all[tok] = cent_new
+    cent_ref[0] = cent_new.astype(cent_ref.dtype)
+    imp_acc[...] = imp_acc[...] + jnp.sum(
+        jnp.where(row < m_valid, c_w, 0.0), axis=0)
+
+    @pl.when(jt == nt - 1)
+    def _finish_slot_block():
+        dent_ref[0] = dent_acc[...].astype(dent_ref.dtype)
+        imp_ref[0] = imp_acc[...].astype(imp_ref.dtype)
+
+
+def routing_health_pallas(x, phi_n, d_stats, c_stats,
+                          cfg: KernelConfig = KernelConfig()):
+    """Routing-health statistics for telemetry/inspection (paper Fig. 9).
+
+    Recomputes logits tile-wise against the saved online-softmax
+    ``(max, denom)`` residuals — the backward kernels' trick — and reduces
+    them in one pass to O(m + S) outputs; the (m × S) weight tensors never
+    exist in HBM:
+
+    Returns ``(disp_entropy (b, S), importance (b, S), comb_entropy (b, m),
+    token_contrib (b, m))`` — per-slot dispatch-softmax entropy over
+    tokens, per-slot combine mass (column sums of C — normalizing by its
+    min gives the expert importance spread), per-token combine-softmax
+    entropy over slots, and per-token dispatch mass (row sums of D — the
+    paper's token contribution; zero means a dropped token, which Soft MoE
+    forbids by construction).
+    """
+    b, m, d = x.shape
+    s = phi_n.shape[1]
+    bt, bs, m_pad, s_pad = _grid_sizes(m, s, cfg)
+    dt = cfg.acc()
+    dmx, dden = d_stats
+    cmx, cden = c_stats
+    x = _pad_to(x, m_pad, axis=1)
+    phi_n = _pad_to(phi_n, s_pad, axis=1)
+    # (max=0, denom=1) stat padding keeps every padded tile finite; padded
+    # rows/columns are masked out of all four reductions above.
+    dmx = _pad_to(dmx.astype(dt), s_pad, axis=1)
+    dden = _pad_to(dden.astype(dt), s_pad, axis=1, value=1.0)
+    cmx = _pad_to(cmx.astype(dt), m_pad, axis=1)
+    cden = _pad_to(cden.astype(dt), m_pad, axis=1, value=1.0)
+    sstat = pl.BlockSpec((1, bs), lambda jb, js, jt: (jb, js))
+    tstat = pl.BlockSpec((1, bt), lambda jb, js, jt: (jb, jt))
+    dent, imp, cent, contrib = pl.pallas_call(
+        functools.partial(_routing_health_kernel, m_valid=m, s_valid=s,
+                          bt=bt, bs=bs, dt=dt),
+        grid=(b, s_pad // bs, m_pad // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt, d), lambda jb, js, jt: (jb, jt, 0)),
+            pl.BlockSpec((d, bs), lambda jb, js, jt: (0, js)),
+            sstat, sstat, tstat, tstat,
+        ],
+        out_specs=(sstat, sstat, tstat, tstat),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, s_pad), dt),
+            jax.ShapeDtypeStruct((b, s_pad), dt),
+            jax.ShapeDtypeStruct((b, m_pad), dt),
+            jax.ShapeDtypeStruct((b, m_pad), dt),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bs,), dt),  # dispatch entropy accumulator
+            pltpu.VMEM((bs,), dt),  # combine importance accumulator
+            pltpu.VMEM((m_pad,), dt),  # combine entropy (all tokens)
+            pltpu.VMEM((m_pad,), dt),  # token contribution (all tokens)
+        ],
+        interpret=cfg.resolve_interpret(),
+    )(x, phi_n, dmx, dden, cmx, cden)
+    return dent[:, :s], imp[:, :s], cent[:, :m], contrib[:, :m]
+
+
+# ---------------------------------------------------------------------------
 # forward: combine  y = C Ys   (stats-given and online variants)
 # ---------------------------------------------------------------------------
 

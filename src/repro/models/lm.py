@@ -69,17 +69,24 @@ def block_init(rng, cfg, is_moe: bool):
 def block_apply(params, cfg, x, *, is_moe: bool, is_global=True,
                 positions=None, cache=None, mode: str = "train",
                 use_kernel: bool = False, block_tables=None,
-                paged_kernel: bool = False):
-    """Returns (y, new_cache, aux). `is_global` may be a traced bool (scan
-    over gemma3's 5-local:1-global pattern with shared weights).
+                paged_kernel: bool = False, telemetry: bool = False):
+    """Returns (y, new_cache, aux) — or (y, new_cache, aux, telem) when
+    ``telemetry=True``. `is_global` may be a traced bool (scan over
+    gemma3's 5-local:1-global pattern with shared weights).
     ``block_tables`` (B, blocks_per_row) switches attention caches to the
     paged block-pool layout (shared by every layer — all attention layers
     write the same positions); ``paged_kernel`` additionally routes paged
-    single-token decode through the Pallas paged-attention kernel."""
+    single-token decode through the Pallas paged-attention kernel.
+
+    ``telemetry`` is a static build flag: the extra return is a dict of
+    ``stop_gradient``'d f32 scalars (attention-path absmax, residual RMS,
+    and the MoE routing-health set) with a structure fixed by the arch —
+    the block's output is bit-identical either way."""
     aux = jnp.zeros((), jnp.float32)
     new_cache = {} if cache is not None else None
     xn = norm_apply(params["norm1"], cfg, x)
     mix = 0.0
+    a_out = None
     if cfg.has_attention():
         a_out, a_cache = attention_apply(
             params["attn"], cfg, xn,
@@ -105,18 +112,32 @@ def block_apply(params, cfg, x, *, is_moe: bool, is_global=True,
             new_cache["ssm"] = s_cache
     x = x + constrain(mix, "batch", "seq", None)
 
+    moe_telem = None
     if "norm2" in params:
         xn = norm_apply(params["norm2"], cfg, x)
         if is_moe:
             m_out, metrics = moe_apply(
                 params["moe"], resolve_moe_cfg(cfg.moe, cfg.d_ff), xn,
-                cfg.act, use_kernel=use_kernel,
+                cfg.act, use_kernel=use_kernel, telemetry=telemetry,
             )
             aux = aux + metrics["moe_aux_loss"]
+            moe_telem = metrics.get("telemetry")
         else:
             m_out = mlp_apply(params["mlp"], xn, cfg.act)
         x = x + constrain(m_out, "batch", "seq", None)
-    return x, new_cache, aux
+    if not telemetry:
+        return x, new_cache, aux
+    sg = jax.lax.stop_gradient
+    telem = {
+        "residual_rms": sg(jnp.sqrt(
+            jnp.mean(jnp.square(x.astype(jnp.float32))))),
+    }
+    if a_out is not None:
+        telem["max_attn_out"] = sg(
+            jnp.abs(a_out.astype(jnp.float32)).max())
+    if moe_telem is not None:
+        telem["moe"] = moe_telem
+    return x, new_cache, aux, telem
 
 
 # ---------------------------------------------------------------------------
@@ -167,30 +188,39 @@ def _remat_policy(cfg):
     return jax.checkpoint_policies.nothing_saveable
 
 
-def _scan_segment(seg_params, cfg, x, flags, is_moe, use_kernel, positions):
+def _scan_segment(seg_params, cfg, x, flags, is_moe, use_kernel, positions,
+                  telemetry=False):
     def body(carry, xs):
         p, is_global = xs
-        y, _, aux = block_apply(
+        out = block_apply(
             p, cfg, carry, is_moe=is_moe, is_global=is_global,
             positions=positions, cache=None, mode="train",
-            use_kernel=use_kernel,
+            use_kernel=use_kernel, telemetry=telemetry,
         )
+        if telemetry:
+            y, _, aux, telem = out
+            return y, (aux, telem)
+        y, _, aux = out
         return y, aux
 
     if cfg.remat:
         body = jax.checkpoint(
             body, policy=_remat_policy(cfg), prevent_cse=False
         )
-    x, auxs = jax.lax.scan(body, x, (seg_params, flags))
-    return x, auxs.sum()
+    x, ys = jax.lax.scan(body, x, (seg_params, flags))
+    if telemetry:
+        auxs, telem = ys  # telem leaves stacked over the segment: (count,)
+        return x, auxs.sum(), telem
+    return x, ys.sum(), None
 
 
 def _unrolled_segment(seg_params, cfg, x, start, count, is_moe, caches,
                       positions, mode, use_kernel, block_tables=None,
-                      paged_kernel=False):
+                      paged_kernel=False, telemetry=False):
     """Python loop (serving path / scan_layers=False): heterogeneous caches."""
     aux = jnp.zeros((), jnp.float32)
     new_caches = []
+    telems = {}
     for j in range(count):
         p = jax.tree_util.tree_map(lambda a: a[j], seg_params)
         is_global = (
@@ -199,21 +229,25 @@ def _unrolled_segment(seg_params, cfg, x, start, count, is_moe, caches,
             else True
         )
         cache_j = caches[start + j] if caches is not None else None
-        x, c, a = block_apply(
+        out = block_apply(
             p, cfg, x, is_moe=is_moe, is_global=is_global,
             positions=positions, cache=cache_j, mode=mode,
             use_kernel=use_kernel, block_tables=block_tables,
-            paged_kernel=paged_kernel,
+            paged_kernel=paged_kernel, telemetry=telemetry,
         )
+        if telemetry:
+            x, c, a, telems[start + j] = out
+        else:
+            x, c, a = out
         aux = aux + a
         new_caches.append(c)
-    return x, aux, new_caches
+    return x, aux, new_caches, telems
 
 
 def lm_apply(params, cfg, tokens, *, embeds=None, positions=None,
              cache=None, mode: str = "train", use_kernel: bool = False,
              last_only: bool = False, block_tables=None,
-             paged_kernel: bool = False):
+             paged_kernel: bool = False, telemetry: bool = False):
     """tokens: (B, S) int32; embeds: (B, N, E) frontend stub (vlm);
     positions: (S,) shared or (B, S) per-row (continuous-batching decode —
     entries < 0 mark pad/inactive tokens that neither write nor read any
@@ -221,7 +255,12 @@ def lm_apply(params, cfg, tokens, *, embeds=None, positions=None,
     cache a paged block pool (serve/block_manager.py) addressed through
     the tables; ``paged_kernel`` streams paged single-token decode through
     the Pallas paged-attention kernel instead of gathering per-row KV
-    views. Returns (logits, new_cache, aux). ``last_only`` unembeds
+    views. Returns (logits, new_cache, aux) — plus a trailing ``telem``
+    pytree when ``telemetry=True`` (a STATIC build flag, never traced:
+    existing 3-tuple call sites are untouched). ``telem`` holds
+    fixed-shape ``stop_gradient``'d stats: per-layer block/MoE health
+    keyed by layer index (scan segments stack leaves to ``(count,)``)
+    and per-row logit numerics probes. ``last_only`` unembeds
     only the final position — prefill needs one next-token distribution,
     not S×vocab logits (at qwen2-72b:prefill_32k the full-logit tensor is
     32×32768×152064 f32 ≈ 638GB global)."""
@@ -236,24 +275,30 @@ def lm_apply(params, cfg, tokens, *, embeds=None, positions=None,
     x = constrain(x, "batch", "seq", None)
 
     aux = jnp.zeros((), jnp.float32)
+    layer_telem = {}
     segs = segment_plan(cfg)
     if cache is None and cfg.scan_layers and mode == "train":
         for seg_params, (start, count, is_moe) in zip(params["segments"], segs):
             flags = _layer_flags(cfg, start, count)
-            x, a = _scan_segment(
-                seg_params, cfg, x, flags, is_moe, use_kernel, positions
+            x, a, t = _scan_segment(
+                seg_params, cfg, x, flags, is_moe, use_kernel, positions,
+                telemetry,
             )
             aux = aux + a
+            if t is not None:
+                layer_telem[start] = t  # leaves stacked (count,)
         new_cache = None
     else:
         new_cache = []
         for seg_params, (start, count, is_moe) in zip(params["segments"], segs):
-            x, a, cs = _unrolled_segment(
+            x, a, cs, ts = _unrolled_segment(
                 seg_params, cfg, x, start, count, is_moe, cache,
                 positions, mode, use_kernel, block_tables, paged_kernel,
+                telemetry,
             )
             aux = aux + a
             new_cache.extend(cs)
+            layer_telem.update(ts)
         if cache is None:
             new_cache = None
 
@@ -262,7 +307,25 @@ def lm_apply(params, cfg, tokens, *, embeds=None, positions=None,
     x = norm_apply(params["final_norm"], cfg, x)
     table = params["unembed"] if "unembed" in params else params["embed"]
     logits = unembed(table, x, cfg.logits_softcap)
-    return logits, new_cache, aux
+    if not telemetry:
+        return logits, new_cache, aux
+    sg = jax.lax.stop_gradient
+    lf = logits.astype(jnp.float32)
+    p = jax.nn.softmax(lf, axis=-1)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    telem = {
+        "layers": layer_telem,
+        "logits": {
+            # per-row reductions: (B,) — continuous batching mixes
+            # unrelated requests in one tick, so rows stay separable
+            "max_abs_logit": sg(jnp.abs(lf).max(axis=(1, 2))),
+            "softmax_entropy": sg((lse - jnp.sum(p * lf, axis=-1)
+                                   ).mean(axis=1)),
+            "nonfinite_count": sg(jnp.sum(
+                ~jnp.isfinite(lf), axis=(1, 2)).astype(jnp.float32)),
+        },
+    }
+    return logits, new_cache, aux, telem
 
 
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
@@ -286,13 +349,19 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     return caches
 
 
-def lm_loss(params, cfg, batch, use_kernel: bool = False):
-    """Next-token cross-entropy. batch: {"tokens": (B,S) [, "embeds"]}"""
+def lm_loss(params, cfg, batch, use_kernel: bool = False,
+            telemetry: bool = False):
+    """Next-token cross-entropy. batch: {"tokens": (B,S) [, "embeds"]}
+
+    ``telemetry=True`` (static flag) adds the ``lm_apply`` telemetry
+    pytree under ``metrics["telemetry"]`` — loss value is unchanged."""
     tokens = batch["tokens"]
-    logits, _, aux = lm_apply(
+    out = lm_apply(
         params, cfg, tokens, embeds=batch.get("embeds"), mode="train",
-        use_kernel=use_kernel,
+        use_kernel=use_kernel, telemetry=telemetry,
     )
+    telem = out[3] if telemetry else None
+    logits, _, aux = out[:3]
     # frontend embeds prepend non-text positions; score text only
     n_prefix = logits.shape[1] - tokens.shape[1]
     logits = logits[:, n_prefix:]
@@ -305,6 +374,8 @@ def lm_loss(params, cfg, batch, use_kernel: bool = False):
     else:
         loss = nll.mean()
     metrics = {"loss": loss, "aux_loss": aux}
+    if telem is not None:
+        metrics["telemetry"] = telem
     return loss + aux, metrics
 
 

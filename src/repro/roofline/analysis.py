@@ -179,6 +179,37 @@ class RooflineReport:
         }
 
 
+def serving_program_bounds(cfg, batch: int, prefill_chunk: int,
+                           verify_lanes: int = 1,
+                           dtype_bytes: int = 2) -> Dict[str, float]:
+    """Predicted roofline lower bound (seconds) for ONE invocation of each
+    serving program (serve/programs.py) on the TPU v5e target:
+
+        t_bound = max(2·N_active·tokens / PEAK_FLOPS, N_active·B / HBM_BW)
+
+    tokens per call: ``batch`` for decode (one token per row),
+    ``prefill_chunk`` for a chunked-prefill call (batch-1),
+    ``batch·verify_lanes`` for a speculative verify. The memory term is
+    the weight stream (active params read once per call) — the dominant
+    decode traffic; KV reads are excluded, so the bound is optimistic and
+    the efficiency ratio ``t_bound / measured`` stays in (0, 1] on the
+    target (and is simply an attribution number on other hosts).
+    ``ServeEngine.program_efficiency()`` joins these with the
+    ``ProgramTimer`` measured wall times."""
+    n_active = cfg.active_param_count()
+    w_bytes = n_active * dtype_bytes
+
+    def bound(tokens: int) -> float:
+        return max(2.0 * n_active * tokens / PEAK_FLOPS_BF16,
+                   w_bytes / HBM_BW)
+
+    return {
+        "decode": bound(batch),
+        "prefill_chunk": bound(prefill_chunk),
+        "verify": bound(batch * verify_lanes),
+    }
+
+
 def model_flops(cfg, shape, mode: str) -> float:
     """6·N·D for training; 2·N·D for one forward (prefill); 2·N_active per
     decoded token. N = active params (MoE-aware)."""

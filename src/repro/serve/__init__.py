@@ -16,6 +16,9 @@ Layering (docs/serving.md has the full design):
   metrics       — ServeMetrics counter/histogram surface + stuck-step Watchdog
   tracing       — per-request span timelines + engine tick flight recorder
   exporter      — Prometheus text-format rendering (/metrics) + strict parser
+  telemetry     — model-interior telemetry consumers: flatten/aggregate the
+                  device-side routing-health + numerics pytrees, and the
+                  batch-variance probe (docs/observability.md)
   faults        — seeded fault injection + chaos harness (CI chaos-smoke)
 """
 from .block_manager import (  # noqa: F401
@@ -86,6 +89,12 @@ from .spec_decode import (  # noqa: F401
     NgramDrafter,
     SpecConfig,
     SpecDecoder,
+)
+from .telemetry import (  # noqa: F401
+    TelemetryAggregator,
+    batch_variance_probe,
+    flatten_telemetry,
+    telemetry_rows,
 )
 from .tracing import (  # noqa: F401
     FlightRecorder,

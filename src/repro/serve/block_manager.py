@@ -146,7 +146,7 @@ class PagedBackend(CacheBackend):
                  dtype=jnp.bfloat16, block_size: int = 16,
                  num_blocks: Optional[int] = None,
                  prefix_cache: bool = True, use_kernel: bool = True,
-                 cache_generated: bool = False):
+                 cache_generated: bool = False, telemetry: bool = False):
         from .programs import (
             clear_blocks_program,
             clear_ssm_slot_program,
@@ -205,16 +205,24 @@ class PagedBackend(CacheBackend):
         # surface.
         self.use_kernel = use_kernel
         self.kernel_fallbacks = 0
+        # Telemetry variants of the programs (see serve/programs.py):
+        # every call stashes its telemetry pytree on `last_telemetry` as
+        # (phase, pytree) for the engine to drain.
+        self.telemetry = telemetry
+        self.last_telemetry = None
         self._prefill_chunk = jax.jit(
-            make_prefill_chunk_paged(cfg), donate_argnums=(1, 2)
+            make_prefill_chunk_paged(cfg, telemetry=telemetry),
+            donate_argnums=(1, 2)
         )
         self._decode = jax.jit(
-            make_decode_step_paged(cfg, use_kernel=use_kernel),
+            make_decode_step_paged(cfg, use_kernel=use_kernel,
+                                   telemetry=telemetry),
             donate_argnums=(4,),
         )
         # Speculative-decoding programs (compiled lazily at first use).
         self._verify = jax.jit(
-            make_verify_step_paged(cfg, use_kernel=use_kernel),
+            make_verify_step_paged(cfg, use_kernel=use_kernel,
+                                   telemetry=telemetry),
             donate_argnums=(4,),
         )
         self._invalidate = jax.jit(
@@ -285,10 +293,13 @@ class PagedBackend(CacheBackend):
 
     def prefill_chunk(self, params, buf, slot: int, toks, poss):
         table = jnp.asarray(self.tables[slot: slot + 1])
-        self.cache, buf = self._prefill_chunk(
+        out = self._prefill_chunk(
             params, self.cache, buf, jnp.int32(slot), table,
             jnp.asarray([toks], jnp.int32), jnp.asarray([poss], jnp.int32),
         )
+        self.cache, buf = out[0], out[1]
+        if self.telemetry:
+            self.last_telemetry = ("prefill", out[2])
         return buf
 
     def prefill_finished(self, entry):
@@ -379,12 +390,16 @@ class PagedBackend(CacheBackend):
         assert self.use_kernel, "fallback with the kernel already off"
         self.use_kernel = False
         self.kernel_fallbacks += 1
+        # the rebuilt programs must keep the telemetry flag: losing it
+        # would change the program arity mid-serve
         self._decode = jax.jit(
-            make_decode_step_paged(self.cfg, use_kernel=False),
+            make_decode_step_paged(self.cfg, use_kernel=False,
+                                   telemetry=self.telemetry),
             donate_argnums=(4,),
         )
         self._verify = jax.jit(
-            make_verify_step_paged(self.cfg, use_kernel=False),
+            make_verify_step_paged(self.cfg, use_kernel=False,
+                                   telemetry=self.telemetry),
             donate_argnums=(4,),
         )
 
@@ -392,32 +407,38 @@ class PagedBackend(CacheBackend):
         if self._tables_dev is None:
             self._tables_dev = jnp.asarray(self.tables)
         try:
-            logits, self.cache = self._decode(
+            out = self._decode(
                 params, toks, pos, self._tables_dev, self.cache
             )
         except Exception:
             if not self.use_kernel:
                 raise
             self._kernel_fallback()
-            logits, self.cache = self._decode(
+            out = self._decode(
                 params, toks, pos, self._tables_dev, self.cache
             )
+        logits, self.cache = out[0], out[1]
+        if self.telemetry:
+            self.last_telemetry = ("decode", out[2])
         return logits
 
     def verify(self, params, toks, poss):
         if self._tables_dev is None:
             self._tables_dev = jnp.asarray(self.tables)
         try:
-            logits, self.cache = self._verify(
+            out = self._verify(
                 params, toks, poss, self._tables_dev, self.cache
             )
         except Exception:
             if not self.use_kernel:
                 raise
             self._kernel_fallback()
-            logits, self.cache = self._verify(
+            out = self._verify(
                 params, toks, poss, self._tables_dev, self.cache
             )
+        logits, self.cache = out[0], out[1]
+        if self.telemetry:
+            self.last_telemetry = ("verify", out[2])
         return logits
 
     def invalidate_positions(self, positions):

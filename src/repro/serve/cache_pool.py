@@ -129,6 +129,11 @@ class CacheBackend:
 
     num_free_slots: int
     max_chunk: int
+    # model-interior telemetry (docs/observability.md): backends built
+    # with telemetry=True stash the latest (phase, device pytree) here
+    # after every prefill/decode/verify call; the engine drains it
+    telemetry: bool = False
+    last_telemetry = None
 
     def accepts(self, prompt_len: int, max_new: int) -> bool:
         """Can this request EVER fit (submit-time validation)?"""
@@ -220,10 +225,16 @@ class CacheBackend:
 
 class ContiguousBackend(CacheBackend):
     """`CachePool` behind the CacheBackend interface: admission == a free
-    slot, memory == num_slots x max_len whatever the traffic."""
+    slot, memory == num_slots x max_len whatever the traffic.
+
+    ``telemetry=True`` builds the telemetry variant of each program
+    (serve/programs.py): every prefill/decode/verify call additionally
+    stashes its telemetry pytree on ``self.last_telemetry`` as
+    ``(phase, pytree)`` for the engine to drain — method signatures and
+    returned logits are unchanged."""
 
     def __init__(self, cfg, num_slots: int, max_len: int,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, telemetry: bool = False):
         from .programs import (
             invalidate_positions_program,
             make_decode_step,
@@ -234,18 +245,23 @@ class ContiguousBackend(CacheBackend):
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
+        self.telemetry = telemetry
+        self.last_telemetry = None  # (phase, device pytree) | None
         self.pool = CachePool(cfg, num_slots, max_len, dtype)
         # Donate the cache (and logits buffer) so XLA aliases them in
         # place instead of materializing a second full pool every tick
         # (no-op on CPU, which lacks donation — a one-time warning).
         self._prefill_chunk = jax.jit(
-            make_prefill_chunk_step(cfg), donate_argnums=(1, 2)
+            make_prefill_chunk_step(cfg, telemetry=telemetry),
+            donate_argnums=(1, 2)
         )
-        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(3,))
+        self._decode = jax.jit(make_decode_step(cfg, telemetry=telemetry),
+                               donate_argnums=(3,))
         # Speculative-decoding programs: compiled lazily at first use, so
         # non-speculative engines never pay for them (their jit caches
         # stay at 0 and the zero-recompile accounting still holds).
-        self._verify = jax.jit(make_verify_step(cfg), donate_argnums=(3,))
+        self._verify = jax.jit(make_verify_step(cfg, telemetry=telemetry),
+                               donate_argnums=(3,))
         self._invalidate = jax.jit(
             invalidate_positions_program, donate_argnums=(0,)
         )
@@ -266,22 +282,27 @@ class ContiguousBackend(CacheBackend):
         return None if slot is None else (slot, 0)
 
     def prefill_chunk(self, params, buf, slot, toks, poss):
-        self.pool.cache, buf = self._prefill_chunk(
+        out = self._prefill_chunk(
             params, self.pool.cache, buf, jnp.int32(slot),
             jnp.asarray([toks], jnp.int32), jnp.asarray([poss], jnp.int32),
         )
+        self.pool.cache, buf = out[0], out[1]
+        if self.telemetry:
+            self.last_telemetry = ("prefill", out[2])
         return buf
 
     def decode(self, params, toks, pos):
-        logits, self.pool.cache = self._decode(
-            params, toks, pos, self.pool.cache
-        )
+        out = self._decode(params, toks, pos, self.pool.cache)
+        logits, self.pool.cache = out[0], out[1]
+        if self.telemetry:
+            self.last_telemetry = ("decode", out[2])
         return logits
 
     def verify(self, params, toks, poss):
-        logits, self.pool.cache = self._verify(
-            params, toks, poss, self.pool.cache
-        )
+        out = self._verify(params, toks, poss, self.pool.cache)
+        logits, self.pool.cache = out[0], out[1]
+        if self.telemetry:
+            self.last_telemetry = ("verify", out[2])
         return logits
 
     def invalidate_positions(self, positions):

@@ -53,6 +53,7 @@ from .sampling import (
 )
 from .scheduler import Request, Scheduler
 from .spec_decode import SpecConfig, SpecDecoder
+from .telemetry import TelemetryAggregator
 from .tracing import (
     SPAN_ADMITTED,
     SPAN_DECODE_TICK,
@@ -115,7 +116,8 @@ class ServeEngine:
                  cache_generated: bool = False,
                  spec: Optional[SpecConfig] = None,
                  max_queue: Optional[int] = None,
-                 trace: bool = False, flight_recorder: int = 0):
+                 trace: bool = False, flight_recorder: int = 0,
+                 telemetry: bool = False):
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -129,13 +131,14 @@ class ServeEngine:
                     "cache_generated needs the paged backend's radix tree"
                 )
             self.backend = ContiguousBackend(cfg, batch_size, max_len,
-                                             cache_dtype)
+                                             cache_dtype,
+                                             telemetry=telemetry)
         elif backend == "paged":
             self.backend = PagedBackend(
                 cfg, batch_size, max_len, cache_dtype,
                 block_size=block_size, num_blocks=num_blocks,
                 prefix_cache=prefix_cache, use_kernel=use_kernel,
-                cache_generated=cache_generated,
+                cache_generated=cache_generated, telemetry=telemetry,
             )
         else:
             raise ValueError(f"unknown backend {backend!r}")
@@ -182,12 +185,17 @@ class ServeEngine:
                          if flight_recorder else None)
         self.ticks = 0
         self._kfb_seen = getattr(self.backend, "kernel_fallbacks", 0)
+        # Model-interior telemetry (serve/telemetry.py): drains the
+        # backend's per-call (phase, pytree) stash after each tick phase.
+        self.telemetry = TelemetryAggregator() if telemetry else None
         self._timers = {}
-        if self.recorder is not None:
+        if self.recorder is not None or telemetry:
             # Wrap the backend's public model entry points + the sampler
             # with host-side timers. FaultInjector attaches AFTER engine
             # construction and wraps whatever is bound then, so injected
             # faults stay timed and detach() restores the timed methods.
+            # Telemetry builds them too: program_efficiency() joins their
+            # measured wall times with the roofline bounds.
             for name in ("prefill_chunk", "decode", "verify"):
                 timer = ProgramTimer(name, getattr(self.backend, name))
                 setattr(self.backend, name, timer)
@@ -283,8 +291,15 @@ class ServeEngine:
             self._spec.drop_slot(entry.slot)
         self._admission_hold = False
         if self.tracer is not None:
-            self.tracer.span(entry.req, SPAN_RETIRED,
-                             reason=entry.req.finish_reason)
+            attrs = {"reason": entry.req.finish_reason}
+            if self.telemetry is not None:
+                # annotate retirement with the latest decode numerics so a
+                # trace shows the model state the request retired under
+                flat = self.telemetry.latest.get("decode", {})
+                for k in ("logits_max_abs_logit", "logits_softmax_entropy"):
+                    if k in flat:
+                        attrs[k] = round(flat[k], 6)
+            self.tracer.span(entry.req, SPAN_RETIRED, **attrs)
 
     def _abort_entry(self, entry, reason: str):
         """Abnormal retirement (cancellation / deadline / poisoned row):
@@ -410,9 +425,15 @@ class ServeEngine:
         record."""
         t0 = time.perf_counter() if self.recorder is not None else 0.0
         self._expire_deadlines()
+        if self.telemetry is not None:
+            self.telemetry.begin_tick()
         admitted = self._admit()
         prefilled = self._do_prefill_chunk()
+        if self.telemetry is not None:
+            self.telemetry.drain(self.backend)
         emitted = self._do_decode()
+        if self.telemetry is not None:
+            self.telemetry.drain(self.backend)
         self.ticks += 1
         kfb = getattr(self.backend, "kernel_fallbacks", 0)
         if kfb != self._kfb_seen:
@@ -436,6 +457,9 @@ class ServeEngine:
                 "programs": {name: t.take_tick()
                              for name, t in self._timers.items()},
                 **self.backend.occupancy(),
+                **({"telemetry": dict(self.telemetry.tick)}
+                   if self.telemetry is not None and self.telemetry.tick
+                   else {}),
             })
         return emitted
 
@@ -518,6 +542,39 @@ class ServeEngine:
 
     def peak_cache_bytes(self) -> int:
         return self.backend.peak_cache_bytes()
+
+    def telemetry_snapshot(self) -> dict:
+        """Latest flat model-interior stats per phase (empty when
+        telemetry is off): ``{"decode": {"moe_l2_dispatch_entropy": ...,
+        "logits_max_abs_logit": ...}, "prefill": {...}}``."""
+        if self.telemetry is None:
+            return {}
+        return {phase: dict(flat)
+                for phase, flat in self.telemetry.latest.items()}
+
+    def program_efficiency(self) -> dict:
+        """Roofline-vs-measured attribution: predicted lower-bound
+        seconds per program (roofline/analysis.py
+        ``serving_program_bounds``) over the ``ProgramTimer`` measured
+        mean wall time — the ``repro_serve_program_efficiency`` gauge.
+        1.0 means the program runs at the roofline bound on the target;
+        on other hosts it is an attribution number, not a grade. Empty
+        until a program has run (needs telemetry or a flight recorder
+        for the timers to exist)."""
+        from ..roofline.analysis import serving_program_bounds
+
+        if not self._timers:
+            return {}
+        lanes = (self._spec.k + 1) if self._spec is not None else 1
+        bounds = serving_program_bounds(
+            self.cfg, self.batch, self.sched.prefill_chunk, lanes)
+        out = {}
+        for name, timer in self._timers.items():
+            if name not in bounds or timer.calls == 0:
+                continue
+            measured = timer.total_s / timer.calls
+            out[name] = bounds[name] / measured if measured > 0 else 0.0
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -3,7 +3,10 @@
 ``render_prometheus`` turns one ``ServeMetrics`` (serve/metrics.py)
 into the text exposition format (version 0.0.4): counters as
 ``<ns>_<name>_total``, histogram series as cumulative
-``<ns>_<name>_bucket{le="..."}`` plus ``_sum``/``_count``, and an
+``<ns>_<name>_bucket{le="..."}`` plus ``_sum``/``_count``, last-value
+gauges (plain or labeled — the model-interior telemetry surface:
+``<ns>_moe_*`` / ``<ns>_model_*`` routing-health and numerics stats,
+``<ns>_program_efficiency{program="..."}``), and an
 optional frozen engine-config info gauge
 ``<ns>_engine_info{arch="...",...} 1`` (the Prometheus idiom for
 exposing build/config constants as labels). ``AsyncServer`` serves it
@@ -75,6 +78,18 @@ def render_prometheus(metrics: ServeMetrics,
         lines.append(f'{full}_bucket{{le="+Inf"}} {hist.count}')
         lines.append(f"{full}_sum {_fmt(hist.sum)}")
         lines.append(f"{full}_count {hist.count}")
+    for name, variants in sorted(metrics.gauges.items()):
+        full = f"{namespace}_{name}"
+        lines.append(f"# TYPE {full} gauge")
+        for _, (labels, value) in sorted(variants.items()):
+            if labels:
+                labelstr = ",".join(
+                    f'{k}="{_escape_label(v)}"'
+                    for k, v in sorted(labels.items())
+                )
+                lines.append(f"{full}{{{labelstr}}} {_fmt(value)}")
+            else:
+                lines.append(f"{full} {_fmt(value)}")
     if info:
         full = f"{namespace}_engine_info"
         labels = ",".join(

@@ -103,17 +103,34 @@ class Histogram:
 
 
 class ServeMetrics:
-    """Monotonic counters + histogram series with a dict snapshot."""
+    """Monotonic counters + histogram series + last-value gauges, with a
+    dict snapshot. Gauges carry optional labels — a (name, labels) pair
+    is one series (``set_gauge("program_efficiency", 0.4,
+    program="decode")`` and ``program="verify"`` coexist under one
+    name), matching how serve/exporter.py renders them."""
+
+    # Suffixes parse_prometheus classifies structurally — a gauge name
+    # ending in one would round-trip as the wrong metric kind.
+    _RESERVED = ("_total", "_bucket", "_sum", "_count")
 
     def __init__(self):
         self.counters: Dict[str, int] = defaultdict(int)
         self.series: Dict[str, Histogram] = defaultdict(Histogram)
+        # name -> {sorted-label-items tuple -> (labels dict, value)}
+        self.gauges: Dict[str, Dict[tuple, tuple]] = defaultdict(dict)
 
     def inc(self, name: str, n: int = 1):
         self.counters[name] += n
 
     def observe(self, name: str, value: float):
         self.series[name].observe(value)
+
+    def set_gauge(self, name: str, value: float, **labels):
+        assert not name.endswith(self._RESERVED), (
+            f"gauge name {name!r} ends in a reserved Prometheus suffix"
+        )
+        key = tuple(sorted(labels.items()))
+        self.gauges[name][key] = (dict(labels), float(value))
 
     def count(self, name: str) -> int:
         return self.counters.get(name, 0)
@@ -125,10 +142,29 @@ class ServeMetrics:
         for k, v in other.items():
             self.counters[k] = int(v)
 
+    def merge_gauges(self, other: Dict[str, float], **labels):
+        for k, v in other.items():
+            self.set_gauge(k, v, **labels)
+
+    def reset_counters(self):
+        """Zero every counter, series and gauge in place (same object —
+        references held by servers/benches stay valid). The post-warmup
+        reset the benches run before a measured phase, so warmup traffic
+        never pollutes the exported numbers."""
+        self.counters.clear()
+        self.series.clear()
+        self.gauges.clear()
+
     def snapshot(self) -> dict:
         out: dict = dict(sorted(self.counters.items()))
         for name, hist in sorted(self.series.items()):
             out[name] = hist.summary()
+        for name, variants in sorted(self.gauges.items()):
+            vals = {}
+            for _, (labels, value) in sorted(variants.items()):
+                key = ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
+                vals[key or "value"] = value
+            out[name] = (vals["value"] if list(vals) == ["value"] else vals)
         return out
 
 

@@ -10,6 +10,14 @@ block pool through per-row block tables (serve/block_manager.py). The
 attention cache is per-layer "attn" entries; SSM recurrent state stays
 slot-indexed in both layouts (it is constant-size per row — there is
 nothing to page).
+
+Every factory takes a STATIC ``telemetry`` flag. ``telemetry=True``
+builds a program whose jaxpr additionally emits the ``lm_apply``
+telemetry pytree (fixed-shape stop_gradient'd scalars: per-layer
+routing health + logit numerics) as a trailing output — the tokens the
+program produces are bit-identical to the ``telemetry=False`` build,
+and because the flag is baked at build time it can never trigger a
+recompile at serve time.
 """
 from __future__ import annotations
 
@@ -48,21 +56,23 @@ def make_prefill_step(cfg, max_len: int):
     return prefill
 
 
-def make_decode_step(cfg):
-    """(params, tokens(B,1), pos(B,), cache) -> (logits(B,1,V), cache).
-    Per-row positions; rows with pos<0 are inactive no-ops."""
+def make_decode_step(cfg, telemetry: bool = False):
+    """(params, tokens(B,1), pos(B,), cache) -> (logits(B,1,V), cache
+    [, telem]). Per-row positions; rows with pos<0 are inactive no-ops."""
 
     def decode(params, tokens, pos, cache):
-        logits, cache, _ = lm_apply(
+        out = lm_apply(
             params, cfg, tokens, positions=pos[:, None], cache=cache,
-            mode="decode",
+            mode="decode", telemetry=telemetry,
         )
-        return logits, cache
+        if telemetry:
+            return out[0], out[1], out[3]
+        return out[0], out[1]
 
     return decode
 
 
-def make_prefill_chunk_step(cfg):
+def make_prefill_chunk_step(cfg, telemetry: bool = False):
     """Chunked prefill into one pool slot: (params, pool_cache, logits_buf,
     slot, tokens(1,C), positions(1,C)) -> (pool_cache, logits_buf).
 
@@ -73,20 +83,23 @@ def make_prefill_chunk_step(cfg):
 
     def prefill_chunk(params, cache, buf, slot, tokens, positions):
         row = pool_row(cache, slot)
-        logits, row, _ = lm_apply(
+        out = lm_apply(
             params, cfg, tokens, positions=positions, cache=row,
-            mode="decode", last_only=True,
+            mode="decode", last_only=True, telemetry=telemetry,
         )
+        logits, row = out[0], out[1]
         cache = pool_write_row(cache, slot, row)
         buf = jax.lax.dynamic_update_slice_in_dim(
             buf, logits[:, -1].astype(buf.dtype), slot, axis=0
         )
+        if telemetry:
+            return cache, buf, out[3]
         return cache, buf
 
     return prefill_chunk
 
 
-def make_verify_step(cfg):
+def make_verify_step(cfg, telemetry: bool = False):
     """Speculative-decoding verify: (params, tokens(B,S), pos(B,S), cache)
     -> (logits(B,S,V), cache). A multi-token decode continuation over the
     contiguous pool (chunked-prefill semantics: this call's KV is written
@@ -99,10 +112,13 @@ def make_verify_step(cfg):
     change values, never shapes."""
 
     def verify(params, tokens, pos, cache):
-        logits, cache, _ = lm_apply(
+        out = lm_apply(
             params, cfg, tokens, positions=pos, cache=cache, mode="decode",
+            telemetry=telemetry,
         )
-        return logits, cache
+        if telemetry:
+            return out[0], out[1], out[3]
+        return out[0], out[1]
 
     return verify
 
@@ -162,28 +178,33 @@ def _ssm_row_merge(cache, new_view, slot):
     return out
 
 
-def make_prefill_chunk_paged(cfg):
+def make_prefill_chunk_paged(cfg, telemetry: bool = False):
     """Chunked prefill through a block table: (params, cache, logits_buf,
-    slot, table(1,nb), tokens(1,C), positions(1,C)) -> (cache, buf).
-    Attention writes scatter into the slot's table blocks; SSM state lives
-    in the slot row as in the contiguous path."""
+    slot, table(1,nb), tokens(1,C), positions(1,C)) -> (cache, buf
+    [, telem]). Attention writes scatter into the slot's table blocks;
+    SSM state lives in the slot row as in the contiguous path."""
 
     def prefill_chunk(params, cache, buf, slot, table, tokens, positions):
         view = _ssm_row_view(cache, slot)
-        logits, view, _ = lm_apply(
+        out = lm_apply(
             params, cfg, tokens, positions=positions, cache=view,
             mode="decode", last_only=True, block_tables=table,
+            telemetry=telemetry,
         )
+        logits, view = out[0], out[1]
         cache = _ssm_row_merge(cache, view, slot)
         buf = jax.lax.dynamic_update_slice_in_dim(
             buf, logits[:, -1].astype(buf.dtype), slot, axis=0
         )
+        if telemetry:
+            return cache, buf, out[3]
         return cache, buf
 
     return prefill_chunk
 
 
-def make_decode_step_paged(cfg, use_kernel: bool = False):
+def make_decode_step_paged(cfg, use_kernel: bool = False,
+                           telemetry: bool = False):
     """(params, tokens(B,1), pos(B,), tables(B,nb), cache) ->
     (logits(B,1,V), cache). Rows with pos<0 are inactive; their (all-null)
     table rows contribute only masked-out keys.
@@ -196,16 +217,20 @@ def make_decode_step_paged(cfg, use_kernel: bool = False):
     default jnp gather path is the bit-exact oracle."""
 
     def decode(params, tokens, pos, tables, cache):
-        logits, cache, _ = lm_apply(
+        out = lm_apply(
             params, cfg, tokens, positions=pos[:, None], cache=cache,
             mode="decode", block_tables=tables, paged_kernel=use_kernel,
+            telemetry=telemetry,
         )
-        return logits, cache
+        if telemetry:
+            return out[0], out[1], out[3]
+        return out[0], out[1]
 
     return decode
 
 
-def make_verify_step_paged(cfg, use_kernel: bool = False):
+def make_verify_step_paged(cfg, use_kernel: bool = False,
+                           telemetry: bool = False):
     """Paged speculative verify: (params, tokens(B,S), pos(B,S),
     tables(B,nb), cache) -> (logits(B,S,V), cache). Same contract as
     `make_verify_step` through the block tables. ``use_kernel`` is
@@ -214,11 +239,14 @@ def make_verify_step_paged(cfg, use_kernel: bool = False):
     Pallas kernel is single-query)."""
 
     def verify(params, tokens, pos, tables, cache):
-        logits, cache, _ = lm_apply(
+        out = lm_apply(
             params, cfg, tokens, positions=pos, cache=cache,
             mode="decode", block_tables=tables, paged_kernel=use_kernel,
+            telemetry=telemetry,
         )
-        return logits, cache
+        if telemetry:
+            return out[0], out[1], out[3]
+        return out[0], out[1]
 
     return verify
 

@@ -416,11 +416,26 @@ class AsyncServer:
 
     # -- introspection -----------------------------------------------------
 
+    def _collect_telemetry_gauges(self):
+        """Pull the engine's model-interior telemetry (routing health +
+        numerics, serve/telemetry.py) and roofline-vs-measured program
+        efficiency into labeled gauges. No-ops unless the engine was
+        built with telemetry=True."""
+        agg = getattr(self.eng, "telemetry", None)
+        if agg is not None:
+            self.metrics.merge_gauges(agg.gauges())
+        eff = getattr(self.eng, "program_efficiency", None)
+        if eff is not None:
+            for program, ratio in (eff() or {}).items():
+                self.metrics.set_gauge(
+                    "program_efficiency", ratio, program=program)
+
     def snapshot(self) -> dict:
         """Server metrics + engine robustness counters + watchdog, as
         one flat dict (the bench exports this into BENCH_serve.json)."""
         collect_engine_metrics(self.eng, self.metrics)
         self.metrics.counters["watchdog_stalls"] = self.watchdog.stalls
+        self._collect_telemetry_gauges()
         return self.metrics.snapshot()
 
     def metrics_text(self) -> str:
@@ -428,6 +443,7 @@ class AsyncServer:
         full metrics surface + the frozen engine-config info gauge."""
         collect_engine_metrics(self.eng, self.metrics)
         self.metrics.counters["watchdog_stalls"] = self.watchdog.stalls
+        self._collect_telemetry_gauges()
         info = None
         if hasattr(self.eng, "config_info"):
             info = self.eng.config_info()

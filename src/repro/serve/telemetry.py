@@ -1,0 +1,221 @@
+"""Host-side consumers of the model-interior telemetry pytree.
+
+The telemetry-variant serving programs (serve/programs.py) emit one
+fixed-shape device pytree per call — per-layer block/MoE routing health
+plus logit numerics probes (see models/lm.py ``lm_apply``). This module
+turns those pytrees into host floats:
+
+* ``flatten_telemetry`` — one device pytree -> flat ``{name: float}``
+  scalars (``l<idx>_residual_rms``, ``moe_l<idx>_dispatch_entropy``,
+  ``logits_max_abs_logit``, ...). Per-row (B,) leaves reduce by name
+  (``max_*`` -> max, nonfinite counts -> sum, else mean). Names never
+  end in a Prometheus-reserved suffix (``_total``/``_bucket``/``_sum``/
+  ``_count``), so they render directly as gauges.
+* ``telemetry_rows`` — the per-row view ``{layer: {stat: (B,) array}}``
+  the batch-variance probe compares slot-by-slot.
+* ``TelemetryAggregator`` — drains a backend's ``last_telemetry``
+  stash once per engine phase; keeps the latest flat stats per phase
+  (``prefill`` / ``decode`` / ``verify``) and the per-tick delta the
+  flight recorder stores.
+* ``batch_variance_probe`` — serves the same request alone vs
+  co-batched and reports the target row's per-step routing-stat
+  divergence (ROADMAP "batch-invariant MoE serving" acceptance
+  instrument; semantics in docs/observability.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+_RESERVED_SUFFIXES = ("_total", "_bucket", "_sum", "_count")
+
+
+def _gauge_safe(name: str) -> str:
+    """Keep flat stat names out of the Prometheus parser's reserved
+    suffix space (exporter.parse_prometheus classifies by suffix):
+    ``nonfinite_count`` -> ``nonfinite_count_val``."""
+    if name.endswith(_RESERVED_SUFFIXES):
+        return name + "_val"
+    return name
+
+
+def _reduce(name: str, arr: np.ndarray) -> float:
+    """Reduce a per-row leaf to one scalar by stat semantics."""
+    if arr.ndim == 0:
+        return float(arr)
+    if name.startswith("max_"):
+        return float(arr.max())
+    if "nonfinite" in name:
+        return float(arr.sum())
+    return float(arr.mean())
+
+
+def flatten_telemetry(tree) -> Dict[str, float]:
+    """Serving-path (unrolled) telemetry pytree -> flat host scalars.
+
+    ``tree`` is the host copy of ``lm_apply``'s telemetry output:
+    ``{"layers": {idx: {stat: scalar, "moe": {...}}}, "logits": {...}}``.
+    The per-row ``rows`` subtrees are skipped here (see
+    ``telemetry_rows``)."""
+    flat: Dict[str, float] = {}
+    for idx, layer in sorted(tree.get("layers", {}).items()):
+        for k, v in layer.items():
+            if k == "moe":
+                for mk, mv in v.items():
+                    if mk == "rows":
+                        continue
+                    flat[_gauge_safe(f"moe_l{idx}_{mk}")] = _reduce(
+                        mk, np.asarray(mv))
+            else:
+                flat[_gauge_safe(f"l{idx}_{k}")] = _reduce(k, np.asarray(v))
+    for k, v in tree.get("logits", {}).items():
+        flat[_gauge_safe(f"logits_{k}")] = _reduce(k, np.asarray(v))
+    return flat
+
+
+def telemetry_rows(tree) -> Dict[object, Dict[str, np.ndarray]]:
+    """Per-row view: ``{layer_idx: {stat: (B,)}}`` for every MoE layer
+    that emitted a ``rows`` subtree, plus ``{"logits": {stat: (B,)}}``."""
+    out: Dict[object, Dict[str, np.ndarray]] = {}
+    for idx, layer in tree.get("layers", {}).items():
+        rows = layer.get("moe", {}).get("rows")
+        if rows:
+            out[idx] = {k: np.asarray(v) for k, v in rows.items()}
+    logits = tree.get("logits")
+    if logits:
+        out["logits"] = {k: np.asarray(v) for k, v in logits.items()}
+    return out
+
+
+class TelemetryAggregator:
+    """Pulls ``(phase, device pytree)`` stashes off a backend and keeps
+    the latest host-side stats per phase. One ``jax.device_get`` per
+    drained phase — the telemetry pytree is a few hundred scalars, so
+    the sync is the cost of turning the feature on, never of having it
+    compiled in."""
+
+    def __init__(self):
+        self.latest: Dict[str, Dict[str, float]] = {}
+        self.latest_rows: Dict[str, dict] = {}
+        self.tick: Dict[str, Dict[str, float]] = {}
+        self.drained = 0
+
+    def begin_tick(self):
+        self.tick = {}
+
+    def drain(self, backend) -> Optional[str]:
+        """Consume the backend's stash (if any); returns the phase."""
+        stash = getattr(backend, "last_telemetry", None)
+        if stash is None:
+            return None
+        backend.last_telemetry = None
+        phase, tree = stash
+        host = jax.device_get(tree)
+        flat = flatten_telemetry(host)
+        self.latest[phase] = flat
+        self.latest_rows[phase] = telemetry_rows(host)
+        self.tick[phase] = flat
+        self.drained += 1
+        return phase
+
+    def gauges(self) -> Dict[str, float]:
+        """Prometheus-ready gauge names: ``moe_<phase>_l<idx>_<stat>``
+        for MoE routing health, ``model_<phase>_<stat>`` for the rest."""
+        out: Dict[str, float] = {}
+        for phase, flat in self.latest.items():
+            for k, v in flat.items():
+                if k.startswith("moe_"):
+                    out[f"moe_{phase}_{k[len('moe_'):]}"] = v
+                else:
+                    out[f"model_{phase}_{k}"] = v
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Batch-variance probe
+# ---------------------------------------------------------------------------
+
+
+def _collect_target_steps(engine, target, fillers,
+                          max_ticks: int = 2000) -> List[dict]:
+    """Drive the engine to completion, recording the target row's
+    per-step decode telemetry: one ``{"layer:stat": value}`` dict per
+    decode call the target participated in."""
+    for req in [target] + fillers:
+        engine.submit(req)
+    steps: List[dict] = []
+    for _ in range(max_ticks):
+        if target.done and not engine.sched.pending():
+            break
+        entry = engine.sched.entry_for(target)
+        in_decode = entry is not None and entry in engine.sched.decode_entries()
+        slot = entry.slot if entry is not None else None
+        engine.step()
+        # record only ticks whose decode call actually advanced the
+        # target row: it was a decode entry before the tick and did not
+        # retire during it (the retirement tick's decode excludes it)
+        if in_decode and not target.done and "decode" in engine.telemetry.tick:
+            rows = engine.telemetry.latest_rows.get("decode", {})
+            rec = {}
+            for layer, stats in rows.items():
+                for k, v in stats.items():
+                    if np.ndim(v) >= 1 and np.shape(v)[0] > slot:
+                        rec[f"{layer}:{k}"] = float(np.asarray(v)[slot])
+            steps.append(rec)
+    return steps
+
+
+def batch_variance_probe(cfg, params, prompt, batch_size: int = 4,
+                         max_new_tokens: int = 8, max_len: int = 64,
+                         backend: str = "contiguous",
+                         **engine_kw) -> dict:
+    """Quantify batch-composition dependence of the serving forward pass.
+
+    Serves ``prompt`` twice with telemetry on: alone (batch_size=1) and
+    co-batched with ``batch_size - 1`` distinct filler requests, then
+    compares the TARGET row's per-decode-step telemetry (per-layer MoE
+    routing rows + per-row logit probes) step-by-step between the runs.
+
+    Returns ``{"divergence", "per_stat", "steps_compared"}`` where
+    ``divergence`` is the max absolute per-step difference over all
+    stats. Row-independent routing (dense MLPs; Soft MoE's per-sequence
+    softmaxes; tokens-choice with group_size=1) gives ~0. For a FINITE
+    reading the routing must both group sequences AND let capacity
+    competition reach the target: ``group_size = batch_size``, a
+    ``capacity_factor`` low enough that buffers bind, and ``bpr=True``
+    (positional priority always favors the target in row 0; batch
+    priority re-ranks by router confidence across the group, so fillers
+    can evict the target — the paper's §3.5 batch effect). This is the
+    measurement side of the ROADMAP "batch-invariant MoE serving" item.
+    """
+    from .engine import ServeEngine
+    from .scheduler import Request
+
+    def run(n_rows: int, fillers: List[list]) -> List[dict]:
+        eng = ServeEngine(cfg, params, batch_size=n_rows, max_len=max_len,
+                          backend=backend, telemetry=True, **engine_kw)
+        tgt = Request(prompt=list(prompt), max_new_tokens=max_new_tokens)
+        fil = [Request(prompt=list(f), max_new_tokens=max_new_tokens)
+               for f in fillers]
+        return _collect_target_steps(eng, tgt, fil)
+
+    vocab = cfg.vocab_size
+    fillers = [[(t * (i + 2) + 1) % vocab for t in prompt]
+               for i in range(batch_size - 1)]
+    solo = run(1, [])
+    cob = run(batch_size, fillers)
+
+    per_stat: Dict[str, float] = {}
+    n = min(len(solo), len(cob))
+    for a, b in zip(solo[:n], cob[:n]):
+        for k in a.keys() & b.keys():
+            d = abs(a[k] - b[k])
+            if np.isfinite(d):
+                per_stat[k] = max(per_stat.get(k, 0.0), d)
+    return {
+        "divergence": max(per_stat.values(), default=0.0),
+        "per_stat": dict(sorted(per_stat.items())),
+        "steps_compared": n,
+    }

@@ -321,6 +321,15 @@ class ProgramTimer:
         self._tick_s = 0.0
         return out
 
+    def reset(self):
+        """Zero the lifetime accumulators — benches call this after the
+        compile-warmup request so ``program_efficiency()`` attributes
+        only steady-state calls, not the first trace-and-compile."""
+        self.calls = 0
+        self.total_s = 0.0
+        self._tick_calls = 0
+        self._tick_s = 0.0
+
     def __getattr__(self, name):
         if name == "fn":  # not yet set (mid-__init__): avoid recursion
             raise AttributeError(name)

@@ -43,7 +43,13 @@ def init_train_state(rng, init_fn, zero1: bool = False):
 
 def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig,
                     microbatches: int = 1):
-    """loss_fn(params, batch) -> (loss, metrics). Returns step(state, batch)."""
+    """loss_fn(params, batch) -> (loss, metrics). Returns step(state, batch).
+
+    A telemetry-enabled loss (``lm_loss(..., telemetry=True)``) nests the
+    model-interior stats pytree under ``metrics["telemetry"]``; it rides
+    the same microbatch aggregation below (``max_*`` leaves take the step
+    max, the rest the mean) and the Trainer flattens it at log time —
+    nothing here special-cases it."""
 
     def grads_of(params, batch):
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(

@@ -115,7 +115,18 @@ class Trainer:
                     raise RuntimeError("straggler abort -> restart")
             step += 1
             if step % self.cfg.log_every == 0:
+                # A telemetry-enabled loss_fn (lm_loss(telemetry=True))
+                # nests the model-interior stats pytree under
+                # metrics["telemetry"]; flatten it to scalars next to the
+                # scalar metrics (serve/telemetry.py owns the naming).
+                telem = metrics.pop("telemetry", None)
                 m = {k: float(v) for k, v in metrics.items()}
+                if telem is not None:
+                    from ..serve.telemetry import flatten_telemetry
+                    m.update({
+                        f"telemetry_{k}": v for k, v in
+                        flatten_telemetry(jax.device_get(telem)).items()
+                    })
                 m["step"] = step
                 m["step_time"] = dt
                 self.metrics_history.append(m)

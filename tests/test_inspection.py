@@ -11,7 +11,7 @@ def test_routing_stats():
     cfg = MoEConfig(variant="soft", num_experts=16, expert_d_ff=32)
     params = moe_init(jax.random.PRNGKey(0), 32, cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 48, 32))
-    stats = routing_stats(x, params, cfg)
+    stats = routing_stats(x, params)
     # total dispatch mass equals total slots (each slot's column sums to 1)
     total = float(stats["token_contribution"].sum(-1).mean())
     assert abs(total - 16) < 1e-3
@@ -24,3 +24,20 @@ def test_routing_stats():
     s = summarize(stats)
     assert "expert_importance_spread" in s
     assert s["max_dispatch_weight"] <= 1.0
+
+
+def test_chunked_routing_stats_match_dense_oracle():
+    cfg = MoEConfig(variant="soft", num_experts=16, expert_d_ff=32)
+    params = moe_init(jax.random.PRNGKey(0), 32, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 48, 32))
+    dense = routing_stats(x, params)
+    for chunk in (7, 16, 48, 512):  # ragged, even, whole, oversize
+        chunked = routing_stats(x, params, method="chunked",
+                                chunk_tokens=chunk)
+        for k, v in chunked.items():
+            assert k in dense
+            assert jnp.allclose(jnp.asarray(v), jnp.asarray(dense[k]),
+                                atol=1e-4, rtol=1e-4), (k, chunk)
+    # the sort-based cumulative curves are dense-only
+    assert "tokens_for_50pct" not in routing_stats(x, params,
+                                                   method="chunked")

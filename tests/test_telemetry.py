@@ -1,0 +1,181 @@
+"""Model-interior serving telemetry (serve/telemetry.py + the telemetry
+program variants): the side outputs must be free — bit-identical served
+tokens, zero extra recompiles — and correct — routing stats agreeing
+with the core/inspection.py dense oracle; the batch-variance probe must
+read finite exactly where routing is batch-coupled."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.inspection import routing_stats
+from repro.core.soft_moe import soft_moe_apply, soft_moe_init
+from repro.models import lm_init
+from repro.serve import (
+    Request,
+    SamplingParams,
+    ServeEngine,
+    ServeMetrics,
+    batch_variance_probe,
+    parse_prometheus,
+    render_prometheus,
+)
+
+
+def _moe_setup(name="granite-moe-1b-a400m", **moe_over):
+    cfg = reduced(get_config(name))
+    if moe_over:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, **moe_over))
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _serve(cfg, params, telemetry, backend="contiguous", sampled=False):
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                      backend=backend, telemetry=telemetry)
+    sp = (SamplingParams(temperature=0.9, top_k=20, seed=7) if sampled
+          else SamplingParams())
+    reqs = [Request(prompt=[1, 2, 3, 4], max_new_tokens=6, sampling=sp),
+            Request(prompt=[9, 8, 7], max_new_tokens=6, sampling=sp)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return eng, [r.out for r in reqs]
+
+
+@pytest.mark.parametrize("backend", ["contiguous", "paged"])
+@pytest.mark.parametrize("sampled", [False, True])
+def test_telemetry_token_parity(backend, sampled):
+    """Telemetry on must serve BIT-IDENTICAL tokens — greedy and
+    sampled, both cache backends. The stats are stop_gradient'd side
+    outputs; any influence on the sampled path is a bug."""
+    cfg, params = _moe_setup()
+    _, off = _serve(cfg, params, False, backend, sampled)
+    eng, on = _serve(cfg, params, True, backend, sampled)
+    assert on == off
+    # and the stats actually populated
+    snap = eng.telemetry_snapshot()
+    assert "decode" in snap and "prefill" in snap
+    assert any(k.startswith("moe_") for k in snap["decode"])
+    assert all(np.isfinite(v) for v in snap["decode"].values())
+
+
+def test_telemetry_zero_recompiles_under_churn():
+    """The telemetry flag is static: after warmup, serving more churny
+    traffic with telemetry on must not grow any jit cache."""
+    cfg, params = _moe_setup()
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                      telemetry=True)
+    eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=2))
+    eng.run()
+    warm = eng.jit_cache_sizes()
+    reqs = [Request(prompt=[i + 1] * (3 + i % 5), max_new_tokens=3 + i % 4)
+            for i in range(6)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert eng.jit_cache_sizes() == warm
+
+
+def test_soft_moe_telemetry_matches_dense_oracle():
+    """The telemetry scalars the serving path emits (computed from the
+    kernel's saved softmax stats) must agree with the materializing
+    dense oracle in core/inspection.py on the same inputs."""
+    rng = jax.random.PRNGKey(3)
+    cfg = reduced(get_config("granite-moe-1b-a400m"))
+    moe = dataclasses.replace(cfg.moe, variant="soft")
+    d = cfg.d_model
+    params = soft_moe_init(jax.random.PRNGKey(1), d, moe)
+    x = jax.random.normal(rng, (2, 16, d), jnp.float32)
+
+    oracle = routing_stats(x, params, method="dense")
+    for use_kernel in (False, True):
+        _, m = soft_moe_apply(params, moe, x, use_kernel=use_kernel,
+                              telemetry=True)
+        t = m["telemetry"]
+        for tk, ok in (("dispatch_entropy", "dispatch_entropy"),
+                       ("combine_entropy", "combine_entropy"),
+                       ("token_contribution_min", "token_contribution_min"),
+                       ("token_contribution_max", "token_contribution_max"),
+                       ("max_dispatch", "max_dispatch_weight"),
+                       ("max_combine", "max_combine_weight")):
+            np.testing.assert_allclose(
+                np.asarray(t[tk]), np.asarray(oracle[ok]), rtol=2e-5,
+                atol=2e-5, err_msg=f"{tk} (use_kernel={use_kernel})")
+
+
+def test_batch_variance_probe_reads_batch_coupling():
+    """Finite divergence exactly where routing couples rows: group-
+    routed BPR tokens-choice with binding capacity. ~0 on dense (no
+    routing at all) — the probe is the ROADMAP batch-invariant-serving
+    acceptance instrument, so its null must be clean."""
+    cfg, params = _moe_setup(group_size=4, capacity_factor=0.5, bpr=True)
+    grouped = batch_variance_probe(cfg, params, [1, 2, 3, 4], batch_size=4,
+                                   max_new_tokens=8, max_len=32)
+    assert grouped["steps_compared"] > 0
+    assert grouped["divergence"] > 0
+
+    dcfg = reduced(get_config("llama3-8b"))
+    dparams = lm_init(jax.random.PRNGKey(0), dcfg)
+    dense = batch_variance_probe(dcfg, dparams, [1, 2, 3, 4], batch_size=4,
+                                 max_new_tokens=8, max_len=32)
+    assert dense["steps_compared"] > 0
+    assert dense["divergence"] < 1e-5
+
+
+def test_batch_variance_probe_null_on_soft_moe():
+    """Soft MoE's softmaxes are per-sequence (the paper's §3.5 point):
+    the probe must read ~0 even though it IS a MoE."""
+    cfg, params = _moe_setup(variant="soft")
+    res = batch_variance_probe(cfg, params, [1, 2, 3, 4], batch_size=3,
+                               max_new_tokens=6, max_len=32)
+    assert res["steps_compared"] > 0
+    assert res["divergence"] < 1e-5
+
+
+def test_metrics_reset_counters():
+    m = ServeMetrics()
+    m.inc("submitted", 3)
+    m.observe("ttft_s", 0.5)
+    m.set_gauge("model_decode_foo", 1.5)
+    m.reset_counters()
+    assert m.count("submitted") == 0
+    assert not m.series and not m.gauges
+    m.inc("submitted")  # surface still usable after reset
+    assert m.count("submitted") == 1
+
+
+def test_gauge_exporter_round_trip():
+    """Gauges (plain and labeled) must survive the strict parser; names
+    may not collide with the suffix-classified counter/histogram space."""
+    m = ServeMetrics()
+    m.set_gauge("moe_decode_l2_router_entropy", 1.25)
+    m.set_gauge("program_efficiency", 0.4375, program="decode")
+    m.set_gauge("program_efficiency", 0.25, program="verify")
+    with pytest.raises(AssertionError):
+        m.set_gauge("bad_gauge_total", 1.0)
+    text = render_prometheus(m)
+    parsed = parse_prometheus(text)
+    assert parsed["gauges"]["repro_serve_moe_decode_l2_router_entropy"] == (
+        {}, 1.25)
+    # labeled variants share a name; the parser keeps the last sample,
+    # which must still be one of the rendered label sets
+    labels, value = parsed["gauges"]["repro_serve_program_efficiency"]
+    assert labels["program"] in ("decode", "verify")
+    assert value in (0.4375, 0.25)
+
+
+def test_engine_program_efficiency_populates():
+    cfg, params = _moe_setup()
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                      telemetry=True)
+    eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
+    eng.run()
+    eff = eng.program_efficiency()
+    assert "decode" in eff and eff["decode"] > 0
+    assert all(np.isfinite(v) for v in eff.values())
