@@ -515,10 +515,13 @@ def bench_telemetry(cfg, params, batch, max_len, smoke: bool):
        not recompile. Reports the per-phase routing-health/numerics gauge
        count and the roofline-vs-measured program efficiency attribution
        (timers reset post-warmup so compile time is not attributed).
-    2. The batch-variance probe on a group-routed BPR sparse-MoE
-       reference (capacity competition reaches the target row — finite
-       divergence expected) and on this bench's arch as configured
-       (row-independent routing — ~0 expected)."""
+    2. The batch-variance probe three ways: on a group-routed BPR
+       sparse-MoE reference (serving routes per-row, so ~0 expected —
+       the ROADMAP batch-invariant-serving acceptance reading), on this
+       bench's arch as configured (~0 expected), and on the same sparse
+       reference with the ``batch_coupled=True`` escape hatch (old
+       coupled group routing — FINITE expected, proving the instrument
+       itself still detects coupling)."""
     import dataclasses
 
     from repro.models import lm_init as _lm_init
@@ -565,13 +568,18 @@ def bench_telemetry(cfg, params, batch, max_len, smoke: bool):
     print(f"telemetry     parity OK ({sum(map(len, toks_on))} tok) | "
           f"{n_gauges} gauges over {sorted(snap)} | efficiency {eff_s}")
 
-    # Batch-variance probe. The group-routed reference needs BPR +
-    # binding capacity so fillers can evict the target row (positional
-    # priority always favors row 0 — see batch_variance_probe docstring).
+    # Batch-variance probe. The group-routed reference carries the knobs
+    # that USED to couple rows (BPR + binding capacity + group_size =
+    # batch); serving must now read ~0 on it. The batch_coupled=True
+    # variant forces the old group routing so fillers can evict the
+    # target row again — a finite reading there proves the instrument is
+    # alive, not that serving regressed.
     ref = reduced(get_config("granite-moe-1b-a400m"))
     ref = dataclasses.replace(ref, moe=dataclasses.replace(
         ref.moe, group_size=batch, capacity_factor=0.5, bpr=True))
     ref_params = _lm_init(jax.random.PRNGKey(0), ref)
+    coupled_ref = dataclasses.replace(ref, moe=dataclasses.replace(
+        ref.moe, batch_coupled=True))
     # 8 probe tokens even in smoke: capacity eviction of the target row
     # often first bites a few steps in, and the reference model is tiny.
     probe_kw = dict(batch_size=batch, max_new_tokens=8,
@@ -579,14 +587,19 @@ def bench_telemetry(cfg, params, batch, max_len, smoke: bool):
     grouped = batch_variance_probe(ref, ref_params, [1, 2, 3, 4],
                                    **probe_kw)
     own = batch_variance_probe(cfg, params, [1, 2, 3, 4], **probe_kw)
+    coupled = batch_variance_probe(coupled_ref, ref_params, [1, 2, 3, 4],
+                                   **probe_kw)
     print(f"batch-variance probe: group-routed BPR sparse divergence "
           f"{grouped['divergence']:.3e} over {grouped['steps_compared']} "
           f"steps | {cfg.name if hasattr(cfg, 'name') else 'bench arch'} "
-          f"divergence {own['divergence']:.3e}")
+          f"divergence {own['divergence']:.3e} | batch_coupled hatch "
+          f"{coupled['divergence']:.3e}")
     emit("serve_batch_variance_grouped", max(grouped["divergence"], 1e-12)
          * 1e6, "group-routed BPR sparse reference")
     emit("serve_batch_variance_own", max(own["divergence"], 1e-12) * 1e6,
          "bench arch as configured")
+    emit("serve_batch_variance_coupled", max(coupled["divergence"], 1e-12)
+         * 1e6, "batch_coupled=True escape hatch (instrument liveness)")
     return {
         "parity": True,
         "phases": sorted(snap),
@@ -604,6 +617,10 @@ def bench_telemetry(cfg, params, batch, max_len, smoke: bool):
             "bench_arch": {
                 "divergence": float(own["divergence"]),
                 "steps_compared": int(own["steps_compared"]),
+            },
+            "batch_coupled_hatch": {
+                "divergence": float(coupled["divergence"]),
+                "steps_compared": int(coupled["steps_compared"]),
             },
         },
         "exported_gauges": len(metrics.gauges),
@@ -759,8 +776,10 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
         "exporter_metrics": (overload["exporter_counters"]
                              + overload["exporter_histograms"]),
         # Roofline-vs-measured attribution + the batch-variance probe:
-        # the trajectory of these is the point (drift in efficiency or a
-        # group-routed divergence change is a behavior change, not noise).
+        # the trajectory of these is the point. Both served-arch rows
+        # must stay ~0 forever (a finite value is a batch-invariance
+        # regression); the coupled-hatch row must stay finite (a zero
+        # means the instrument died).
         "decode_efficiency": round(
             telemetry["program_efficiency"].get("decode", 0.0), 6),
         "batch_variance_grouped": round(
@@ -768,6 +787,9 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
             6),
         "batch_variance_own": round(
             telemetry["batch_variance"]["bench_arch"]["divergence"], 6),
+        "batch_variance_coupled": round(
+            telemetry["batch_variance"]["batch_coupled_hatch"]["divergence"],
+            6),
     })
     payload["history"] = history
     with open(json_path, "w") as f:
@@ -825,14 +847,29 @@ def run_bench(arch="qwen2-0.5b", requests=32, batch=4, max_len=128,
                 f"(sheds={overload['sheds']}, "
                 f"deadline_misses={overload['deadline_misses']})"
             )
-        # The probe must read finite on the group-routed BPR reference —
-        # a zero there means capacity competition never reached the
-        # target row and the instrument is dead.
+        # Batch-invariance acceptance gates: EVERY served arch must read
+        # ~0 on the probe — the group-routed BPR sparse reference (the
+        # historical worst case) and this bench's arch alike. The
+        # batch_coupled=True escape hatch must read finite, or the
+        # instrument itself is dead and the ~0 readings prove nothing.
         tv = telemetry["batch_variance"]
-        if tv["grouped_bpr_sparse"]["divergence"] <= 0.0:
+        if tv["grouped_bpr_sparse"]["divergence"] >= 1e-5:
             raise SystemExit(
-                "batch-variance probe read 0 on the group-routed BPR "
-                "sparse reference"
+                f"batch-variance probe read "
+                f"{tv['grouped_bpr_sparse']['divergence']:.3e} on the "
+                "group-routed BPR sparse reference — serving routing is "
+                "batch-coupled again"
+            )
+        if tv["bench_arch"]["divergence"] >= 1e-5:
+            raise SystemExit(
+                f"batch-variance probe read "
+                f"{tv['bench_arch']['divergence']:.3e} on the bench arch"
+            )
+        if tv["batch_coupled_hatch"]["divergence"] <= 0.0:
+            raise SystemExit(
+                "batch-variance probe read 0 with batch_coupled=True — "
+                "capacity competition never reached the target row and "
+                "the instrument is dead"
             )
     return payload
 

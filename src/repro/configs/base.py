@@ -89,6 +89,17 @@ class MoEConfig:
     router_z_loss_weight: float = 1e-3
     # Router group size in sequences (sparse variants; paper §3.5).
     group_size: int = 1
+    # Escape hatch: force the training-time batch-coupled group routing
+    # (groups of `group_size` sequences compete for per-call capacity
+    # buffers) in EVERY mode, serving included. Default False: serving
+    # modes ("prefill"/"decode") route each row's tokens independently
+    # and droplessly, so a request's outputs never depend on batch
+    # composition, chunking, or speculative lookahead (the batch-invariant
+    # serving contract; docs/serving.md). Training batches are
+    # fixed-composition, so mode="train" always uses the coupled group
+    # routing regardless of this flag — the paper's training setup is
+    # unchanged.
+    batch_coupled: bool = False
     # Fused Pallas kernel policy (Soft MoE, use_kernel=True; see
     # repro.kernels.tuning). 0 = derive block sizes from the (m, d, S)
     # heuristic table; set explicitly to pin a tiling (or autotune).

@@ -39,12 +39,20 @@ def moe_init(rng, d_model: int, moe_cfg, style: str = "gated"):
 
 
 def moe_apply(params, moe_cfg, x, act: str = "silu",
-              use_kernel: bool = False, telemetry: bool = False):
+              use_kernel: bool = False, telemetry: bool = False,
+              mode: str = "train"):
     """``telemetry=True`` (a static build flag, never a traced value) adds
     a ``metrics["telemetry"]`` dict of stop_gradient'd routing-health
     scalars on the soft / tokens_choice / experts_choice variants — the
     output ``y`` is unchanged. Ablation variants have no router to probe
-    and ignore the flag."""
+    and ignore the flag.
+
+    ``mode`` (static, threaded from ``block_apply``) selects the sparse
+    variants' routing scope: ``"train"`` keeps the paper's batch-coupled
+    group routing; serving modes (``"prefill"``/``"decode"``) route each
+    row independently and droplessly (see core/sparse_moe.py). Soft MoE
+    and the ablations are per-row in every mode — their softmaxes never
+    cross sequences — so they ignore it."""
     if moe_cfg.variant == "soft":
         return soft_moe_apply(params, moe_cfg, x, act, use_kernel=use_kernel,
                               telemetry=telemetry)
@@ -52,8 +60,8 @@ def moe_apply(params, moe_cfg, x, act: str = "silu",
         return ablation_apply(params, moe_cfg, x, act)
     if moe_cfg.variant == "tokens_choice":
         return tokens_choice_apply(params, moe_cfg, x, act,
-                                   telemetry=telemetry)
+                                   telemetry=telemetry, mode=mode)
     if moe_cfg.variant == "experts_choice":
         return experts_choice_apply(params, moe_cfg, x, act,
-                                    telemetry=telemetry)
+                                    telemetry=telemetry, mode=mode)
     raise ValueError(f"unknown MoE variant {moe_cfg.variant!r}")

@@ -14,6 +14,16 @@ sharded over its slot axis the same way.
 
 ``use_kernel=True`` routes dispatch/combine through the fused Pallas TPU
 kernels in ``repro.kernels`` (interpret-mode on CPU).
+
+Per-sequence invariant: both softmaxes normalize WITHIN one sequence —
+dispatch over that sequence's m tokens (axis 1), combine over its n·p
+slots — and the expert mixes are per-row weighted sums, so a sequence's
+output is identical however it is batched (the paper's §3.5 contrast
+with sparse routing, and the reason Soft MoE is batch-invariant at
+serving with no mode switch; the fused kernels keep the batch axis a
+pure grid axis — see kernels/soft_moe_kernels.py — and ref.py states the
+same math for a single sequence). Unlike the sparse variants there is no
+train/serve routing split to thread ``mode`` through.
 """
 from __future__ import annotations
 

@@ -9,6 +9,21 @@ Both use scatter/gather buffers of shape (experts, capacity, d) — never the
 These are also the *native* routers of the assigned MoE archs
 (deepseek-v2-lite: top-6 of 64; granite: top-8 of 32), with capacity
 buffers sized by `capacity_factor`.
+
+Routing scope is mode-dependent (the batch-invariant serving contract):
+
+* ``mode="train"`` (or ``MoEConfig.batch_coupled=True`` in any mode):
+  groups of ``group_size`` sequences route together and compete for
+  per-call capacity buffers — the paper's §3.5 batch-coupled setting,
+  byte-identical to what the training runs always did.
+* serving modes (``"prefill"`` / ``"decode"``): routing is a PURE PER-ROW
+  FUNCTION. Each sequence routes alone (group of one) with a dropless
+  per-request slot budget (``capacity = tokens-in-this-call`` — the worst
+  case for one expert, since top-k choices within a token are distinct),
+  so a request's outputs never depend on which rows share the batch, how
+  the prompt was chunked, or how many speculative positions ride in the
+  call. ``serve.batch_variance_probe`` is the measurement of this
+  invariant and must read ~0 on every served arch.
 """
 from __future__ import annotations
 
@@ -40,6 +55,20 @@ def _router_logits(params, x):
     )
 
 
+def _routing_scope(moe_cfg, mode: str, b: int, m: int):
+    """(coupled, gs, capacity_fn) for the requested mode.
+
+    ``coupled`` group routing spans ``group_size`` sequences and sizes
+    buffers by ``capacity_factor`` (tokens compete, overflow drops).
+    Per-row serving routing fixes the group at ONE sequence and the
+    budget at the dropless bound, making the route of every token a
+    function of that token's row alone.
+    """
+    coupled = moe_cfg.batch_coupled or mode == "train"
+    gs = max(1, min(moe_cfg.group_size, b)) if coupled else 1
+    return coupled, gs
+
+
 def _aux_losses(logits, probs, expert_index, num_experts, moe_cfg):
     """Switch-style load-balance loss + router z-loss."""
     # fraction of tokens routed (first choice) to each expert
@@ -69,18 +98,22 @@ def _router_telemetry(probs):
 
 
 def tokens_choice_apply(params, moe_cfg, x, act: str = "silu",
-                        telemetry: bool = False):
-    """Top-K token-choice routing. x: (b, m, d). Groups of `group_size`
+                        telemetry: bool = False, mode: str = "train"):
+    """Top-K token-choice routing. x: (b, m, d).
+
+    ``mode="train"`` (or ``batch_coupled=True``): groups of ``group_size``
     sequences route together (paper §3.5: tokens in a group compete for
     expert buffer slots — the source of batch effects Soft MoE avoids).
+    Serving modes route each row alone with a dropless slot budget —
+    see the module docstring for the invariant.
 
     ``telemetry=True`` adds ``metrics["telemetry"]``: router
     entropy/confidence, per-expert load spread over the *kept* choices,
-    and the kept fraction — all ``stop_gradient``'d f32 scalars, no effect
-    on ``y``.
+    and kept/dropped fractions — all ``stop_gradient``'d f32 values with
+    per-sequence ``rows`` (b,) views, no effect on ``y``.
     """
     b, m, d = x.shape
-    gs = max(1, min(moe_cfg.group_size, b))
+    coupled, gs = _routing_scope(moe_cfg, mode, b, m)
     g = b // gs
     xg = x.reshape(g, gs * m, d)
     t = gs * m  # tokens per group
@@ -90,14 +123,23 @@ def tokens_choice_apply(params, moe_cfg, x, act: str = "silu",
     probs = jax.nn.softmax(logits, axis=-1)
     gate, expert_index = jax.lax.top_k(probs, k)  # (g,t,k)
 
-    capacity = int(moe_cfg.capacity_factor * k * t / e)
-    capacity = max(capacity, 1)
+    if coupled:
+        capacity = max(int(moe_cfg.capacity_factor * k * t / e), 1)
+    else:
+        # Dropless per-request budget: top-k expert ids within a token are
+        # distinct, so one expert receives at most t (= tokens in this
+        # call) assignments from one row. Decode (m=1) buffers are (e,1,d);
+        # a chunked-prefill or (k+1)-verify call budgets exactly its own
+        # tokens — never the co-batched rows'.
+        capacity = t
 
     # Priority order over tokens: BPR sorts by max router prob (descending);
     # otherwise positional order. The ORDER is discrete — stop_gradient
     # keeps autodiff from differentiating the sort keys (whose transpose
-    # rule lowers to a batched gather this jax build cannot lower).
-    if moe_cfg.bpr:
+    # rule lowers to a batched gather this jax build cannot lower). With a
+    # dropless budget every (token, choice) lands in a unique buffer slot,
+    # so priority is a no-op permutation — per-row serving skips the sort.
+    if moe_cfg.bpr and coupled:
         priority = jnp.argsort(
             jax.lax.stop_gradient(-gate[..., 0]), axis=-1
         )  # (g,t)
@@ -117,7 +159,7 @@ def tokens_choice_apply(params, moe_cfg, x, act: str = "silu",
     pos_sorted = (pos_sorted * cts).sum(-1).reshape(g, t, k)
     # un-sort back to token order
     pos = jnp.take_along_axis(pos_sorted, inv[..., None], axis=1)
-    keep = pos < capacity  # (g,t,k)
+    keep = pos < capacity  # (g,t,k) — all True on the dropless path
 
     gate = gate * keep
     # normalize kept gates (standard top-k renorm)
@@ -149,7 +191,12 @@ def tokens_choice_apply(params, moe_cfg, x, act: str = "silu",
         y = y + sh.sum(0).reshape(b, m, d).astype(x.dtype)
 
     aux = _aux_losses(logits, probs, expert_index, e, moe_cfg)
-    dropped = 1.0 - keep.any(axis=-1).mean()  # fully-dropped token fraction
+    # per-row fully-dropped token fraction (b,): rows never mix, matching
+    # the per-request capacity accounting (0 everywhere on the dropless
+    # serving path); the scalar is its mean.
+    dropped_rows = 1.0 - keep.any(axis=-1).reshape(g, gs, m).mean(
+        axis=2).reshape(b)
+    dropped = dropped_rows.mean()
     metrics = {"moe_aux_loss": aux, "dropped_fraction": dropped}
     if telemetry:
         # per-expert load over KEPT (token, choice) assignments — the
@@ -165,13 +212,14 @@ def tokens_choice_apply(params, moe_cfg, x, act: str = "silu",
                 "kept_fraction": keep.mean().astype(jnp.float32),
                 "dropped_fraction": dropped.astype(jnp.float32),
                 # per-sequence rows (b,): the batch-variance probe compares
-                # the target row solo vs co-batched; kept_fraction is where
-                # group-routed capacity competition shows up
+                # the target row solo vs co-batched; each row's stats are a
+                # function of that row alone under per-row serving routing
                 "rows": {
                     "router_entropy": ent.reshape(g, gs, m).mean(
                         axis=2).reshape(b).astype(jnp.float32),
                     "kept_fraction": keep.reshape(g, gs, m, k).mean(
                         axis=(2, 3)).reshape(b).astype(jnp.float32),
+                    "dropped_fraction": dropped_rows.astype(jnp.float32),
                 },
             },
         )
@@ -179,10 +227,19 @@ def tokens_choice_apply(params, moe_cfg, x, act: str = "silu",
 
 
 def experts_choice_apply(params, moe_cfg, x, act: str = "silu",
-                         telemetry: bool = False):
-    """Experts-Choice routing: each expert takes its top-C tokens."""
+                         telemetry: bool = False, mode: str = "train"):
+    """Experts-Choice routing: each expert takes its top-C tokens.
+
+    Serving modes scope the selection within a single row (group of one)
+    with the dropless budget ``capacity = tokens-in-this-call``: every
+    expert then takes every token of the row, weighted by its router
+    prob — the continuous limit of experts-choice, and the only
+    batch-size-independent member of its family (selection across rows is
+    inherently batch-coupled). ``mode="train"`` / ``batch_coupled=True``
+    keep the paper's competitive top-C selection.
+    """
     b, m, d = x.shape
-    gs = max(1, min(moe_cfg.group_size, b))
+    coupled, gs = _routing_scope(moe_cfg, mode, b, m)
     g = b // gs
     xg = x.reshape(g, gs * m, d)
     t = gs * m
@@ -190,7 +247,10 @@ def experts_choice_apply(params, moe_cfg, x, act: str = "silu",
 
     logits = _router_logits(params, xg)  # (g,t,e)
     probs = jax.nn.softmax(logits, axis=-1)
-    capacity = max(int(moe_cfg.capacity_factor * t / e), 1)
+    if coupled:
+        capacity = max(int(moe_cfg.capacity_factor * t / e), 1)
+    else:
+        capacity = t  # dropless: every expert can take the whole row
 
     # per expert: top-capacity tokens
     scores = probs.transpose(0, 2, 1)  # (g,e,t)
@@ -210,13 +270,14 @@ def experts_choice_apply(params, moe_cfg, x, act: str = "silu",
     aux = moe_cfg.router_z_loss_weight * jnp.mean(
         jnp.square(jax.nn.logsumexp(logits, axis=-1))
     )
-    # dropped = tokens selected by no expert (paper App. B)
+    # dropped = tokens selected by no expert (paper App. B), per row
     selected = jnp.zeros((g, t), bool).at[
         jnp.arange(g)[:, None, None], tidx
     ].set(True)
+    selected_rows = selected.reshape(g, gs, m).mean(axis=2).reshape(b)
     metrics = {
         "moe_aux_loss": aux,
-        "dropped_fraction": 1.0 - selected.mean(),
+        "dropped_fraction": 1.0 - selected_rows.mean(),
     }
     if telemetry:
         # expert load is uniform by construction (each expert takes exactly
@@ -226,14 +287,15 @@ def experts_choice_apply(params, moe_cfg, x, act: str = "silu",
             jax.lax.stop_gradient,
             {
                 **scalars,
-                "kept_fraction": selected.mean().astype(jnp.float32),
-                "dropped_fraction": (1.0 - selected.mean()).astype(
+                "kept_fraction": selected_rows.mean().astype(jnp.float32),
+                "dropped_fraction": (1.0 - selected_rows.mean()).astype(
                     jnp.float32),
                 "rows": {
                     "router_entropy": ent.reshape(g, gs, m).mean(
                         axis=2).reshape(b).astype(jnp.float32),
-                    "kept_fraction": selected.astype(jnp.float32).reshape(
-                        g, gs, m).mean(axis=2).reshape(b),
+                    "kept_fraction": selected_rows.astype(jnp.float32),
+                    "dropped_fraction": (1.0 - selected_rows).astype(
+                        jnp.float32),
                 },
             },
         )

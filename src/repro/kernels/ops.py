@@ -21,6 +21,15 @@ as flash attention treats its saved logsumexp), so both bwd rules drop it.
 Interpret policy: evaluated lazily per call via ``KernelConfig`` — never
 at import time (the seed's ``INTERPRET`` module global went stale if the
 backend was selected after import; see kernels/tuning.py).
+
+Per-sequence invariant (the serving contract): the batch axis is a pure
+GRID axis. Every softmax stat the kernels compute — the dispatch
+``(max, denom)`` per slot and the combine ``(max, denom)`` per token —
+reduces only within one row's (m, S) tile; nothing crosses b. Row i of a
+batched launch is bit-comparable to a batch-1 launch of that row, so a
+served request's routing cannot depend on its co-batched neighbors
+(asserted by the row-independence tests in tests/test_kernels.py; the
+single-sequence ref.py oracle is the semantic source of truth).
 """
 from __future__ import annotations
 

@@ -3,6 +3,15 @@ verbatim semantics, single sequence (batch handled by vmap in ops.py).
 
 This is the reference the Pallas kernels are allclose-checked against, and
 also the backward-pass implementation for the custom_vjp wrappers.
+
+The single-sequence signature here is itself the per-sequence routing
+invariant, stated as an API: dispatch normalizes over THIS sequence's m
+tokens, combine over THIS sequence's S slots, and a batch is nothing but
+an independent vmap of this oracle per row. Any batched implementation
+(the fused Pallas kernels, the jnp einsum path in core/soft_moe.py) must
+therefore agree row-for-row with this function applied to each row alone
+— which is exactly what batch-invariant serving requires, and what
+tests/test_kernels.py's row-independence checks assert.
 """
 from __future__ import annotations
 

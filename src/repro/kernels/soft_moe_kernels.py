@@ -42,7 +42,13 @@ O(m + S) floats per direction instead of the (m × S) softmax re-derivation
 Batching: one kernel launch covers (b, m, d) via a leading batch grid
 axis (no ``jax.vmap`` over ``pallas_call``); the phi tile's index map
 ignores the batch axis, so phi blocks are fetched once and reused across
-the batch.
+the batch. The batch grid axis is PURELY parallel — every online-softmax
+accumulator (dispatch per-slot and combine per-token (max, denom)) is
+indexed by b and reduces only over that row's tokens/slots, so each
+sequence's routing is computed exactly as if it were served alone. This
+is the per-sequence normalization invariant batch-invariant serving
+leans on (ref.py single-sequence oracle; row-independence tests in
+tests/test_kernels.py).
 
 Tiling: d stays whole inside a block (the dot needs full rows); token and
 slot block sizes come from ``tuning.KernelConfig`` (defaults 128 — minor

@@ -119,6 +119,7 @@ def block_apply(params, cfg, x, *, is_moe: bool, is_global=True,
             m_out, metrics = moe_apply(
                 params["moe"], resolve_moe_cfg(cfg.moe, cfg.d_ff), xn,
                 cfg.act, use_kernel=use_kernel, telemetry=telemetry,
+                mode=mode,
             )
             aux = aux + metrics["moe_aux_loss"]
             moe_telem = metrics.get("telemetry")

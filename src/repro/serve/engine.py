@@ -24,6 +24,12 @@ Every device program behind either backend has ONE fixed signature —
 request churn never triggers a recompile (asserted via ``jax.jit`` cache
 stats in tests/test_serve.py and tests/test_serve_paged.py).
 
+Every program also runs the model in a serving mode in which MoE routing
+is a pure per-row function (core/sparse_moe.py), so a request's tokens
+do not depend on its co-batch, on prefill chunking, or on whether it was
+decoded plainly or through a speculative (B, k+1) verify lane
+(tests/test_batch_invariance.py pins this token-for-token).
+
 ``WaveEngine`` keeps the old wave-synchronous behaviour (admit a full
 batch, decode in lockstep, free slots only at the wave boundary) as the
 benchmark baseline for benchmarks/bench_serve.py.

@@ -18,6 +18,15 @@ routing health + logit numerics) as a trailing output — the tokens the
 program produces are bit-identical to the ``telemetry=False`` build,
 and because the flag is baked at build time it can never trigger a
 recompile at serve time.
+
+Every program here runs ``lm_apply`` in a serving mode ("prefill" /
+"decode"), which makes MoE routing a PURE PER-ROW FUNCTION
+(core/sparse_moe.py; Soft MoE is per-row by construction): a row's
+outputs are identical whether it is served solo or co-batched, whether
+its prompt arrived whole or in chunks, and whether its tokens rode a
+(B, 1) decode step or a (B, k+1) speculative verify lane. The batch-
+variance probe (serve/telemetry.py) and the chunked-prefill/spec parity
+tests are the enforcement of this contract.
 """
 from __future__ import annotations
 

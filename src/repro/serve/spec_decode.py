@@ -45,7 +45,12 @@ rolled back); the contiguous backend is supported when its rings never
 wrap (no sliding-window layer shorter than max_len — on a wrapped ring a
 rejected write EVICTS a live entry, which cannot be restored). SSM/
 hybrid archs are rejected: recurrent state advanced by a rejected token
-cannot be rewound.
+cannot be rewound. Sparse-MoE archs are fully supported: serving routes
+each row's tokens independently and droplessly (core/sparse_moe.py), so
+the (B, k+1) verify forward == k+1 single decode steps exactly and
+rollback stays exact — the lifted restriction the batch-invariant
+routing refactor paid for (tests/test_spec_decode.py pins greedy parity
+on both MoE archs).
 """
 from __future__ import annotations
 

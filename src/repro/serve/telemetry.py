@@ -180,14 +180,21 @@ def batch_variance_probe(cfg, params, prompt, batch_size: int = 4,
 
     Returns ``{"divergence", "per_stat", "steps_compared"}`` where
     ``divergence`` is the max absolute per-step difference over all
-    stats. Row-independent routing (dense MLPs; Soft MoE's per-sequence
-    softmaxes; tokens-choice with group_size=1) gives ~0. For a FINITE
-    reading the routing must both group sequences AND let capacity
-    competition reach the target: ``group_size = batch_size``, a
-    ``capacity_factor`` low enough that buffers bind, and ``bpr=True``
-    (positional priority always favors the target in row 0; batch
-    priority re-ranks by router confidence across the group, so fillers
-    can evict the target — the paper's §3.5 batch effect). This is the
+    stats. Serving routes every arch per-row — dense MLPs, Soft MoE's
+    per-sequence softmaxes, and (since the batch-invariant refactor) the
+    sparse variants too, which drop their group/capacity competition at
+    serving and route each row's tokens droplessly — so the probe must
+    read ~0 (< 1e-5) on EVERY served arch, group-routed BPR
+    tokens-choice with binding capacity included. A finite reading on a
+    default config is a regression. The only sanctioned way to make it
+    read finite is the ``MoEConfig.batch_coupled=True`` escape hatch
+    (old training-time group routing at serving) with
+    ``group_size = batch_size``, a ``capacity_factor`` low enough that
+    buffers bind, and ``bpr=True`` (positional priority always favors
+    the target in row 0; batch priority re-ranks by router confidence
+    across the group, so fillers can evict the target — the paper's
+    §3.5 batch effect); CI and the bench run exactly that configuration
+    to prove the instrument itself is still alive. This is the
     measurement side of the ROADMAP "batch-invariant MoE serving" item.
     """
     from .engine import ServeEngine

@@ -233,3 +233,78 @@ def test_kernel_config_threads_through_layer():
     y1, _ = moe_apply(params, cfg, x, use_kernel=True)
     np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# per-sequence invariant: the batch axis is a pure grid axis
+# ---------------------------------------------------------------------------
+
+
+def test_routing_row_independence_vs_batch1():
+    """Row i of a batched routing launch must equal a batch-1 launch of
+    that row BITWISE: the dispatch slots and BOTH saved softmax (max,
+    denom) stats reduce only within the row. This is the kernel-level
+    statement of batch-invariant serving — any cross-b reduction would
+    show up here before it showed up in served tokens."""
+    b, m, d, s = 3, 40, 64, 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, m, d))
+    phi = jax.random.normal(jax.random.PRNGKey(1), (d, s))
+    phi_n = ops.normalized_phi(phi, jnp.float32(1.1))
+    slots, d_stats, c_stats = ops.soft_moe_routing(x, phi_n,
+                                                   with_d_stats=True)
+    for i in range(b):
+        s1, d1, c1 = ops.soft_moe_routing(x[i:i + 1], phi_n,
+                                          with_d_stats=True)
+        assert bool(jnp.array_equal(slots[i], s1[0])), f"slots row {i}"
+        for full, solo, name in ((d_stats, d1, "d"), (c_stats, c1, "c")):
+            assert bool(jnp.array_equal(full[0][i], solo[0][0])), \
+                f"{name}_max row {i}"
+            assert bool(jnp.array_equal(full[1][i], solo[1][0])), \
+                f"{name}_den row {i}"
+
+
+def test_combine_row_independence_vs_batch1():
+    """Same contract for the combine kernel (stats path and online
+    path): per-token softmax over slots never reads another row."""
+    b, m, d, s = 3, 32, 64, 16
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, m, d))
+    ys = jax.random.normal(jax.random.PRNGKey(3), (b, s, d))
+    phi = jax.random.normal(jax.random.PRNGKey(4), (d, s))
+    phi_n = ops.normalized_phi(phi, jnp.float32(0.9))
+    _, c_stats = ops.soft_moe_routing(x, phi_n)
+    y = ops.soft_moe_combine(x, phi_n, ys, c_stats=c_stats)
+    y_online = ops.soft_moe_combine(x, phi_n, ys)
+    for i in range(b):
+        _, c1 = ops.soft_moe_routing(x[i:i + 1], phi_n)
+        y1 = ops.soft_moe_combine(x[i:i + 1], phi_n, ys[i:i + 1],
+                                  c_stats=c1)
+        assert bool(jnp.array_equal(y[i], y1[0])), f"stats row {i}"
+        y1o = ops.soft_moe_combine(x[i:i + 1], phi_n, ys[i:i + 1])
+        assert bool(jnp.array_equal(y_online[i], y1o[0])), f"online row {i}"
+
+
+def test_full_soft_moe_layer_row_independence():
+    """End-to-end per-row check against the single-sequence ref.py
+    oracle: each row of a batched soft_moe layer (kernel AND jnp paths)
+    matches the oracle applied to that row alone."""
+    from repro.layers.mlp import experts_apply
+
+    cfg = MoEConfig(variant="soft", num_experts=4, expert_d_ff=32,
+                    slots_per_expert=2)
+    params = moe_init(jax.random.PRNGKey(0), 32, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 24, 32))
+    n, p = cfg.num_experts, cfg.slots_per_expert
+
+    def expert_fn(slots_flat):  # (S, d) -> (S, d), matching the layer
+        per = slots_flat.reshape(n, p, 32)
+        out = experts_apply(params["experts"], per, "silu")
+        return out.reshape(n * p, 32)
+
+    for use_kernel in (False, True):
+        y, _ = moe_apply(params, cfg, x, use_kernel=use_kernel)
+        for i in range(3):
+            want = ref.soft_moe_ref(x[i], params["phi"].reshape(32, n * p),
+                                    params["scale"], expert_fn)
+            np.testing.assert_allclose(
+                np.asarray(y[i]), np.asarray(want), rtol=2e-5, atol=2e-5,
+                err_msg=f"row {i} use_kernel={use_kernel}")

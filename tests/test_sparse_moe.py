@@ -84,3 +84,111 @@ def test_batch_effects_exist_for_sparse_routing():
     # sequence 0 identical in both batches, output may differ
     diff = float(jnp.abs(y1[0] - y2[0]).max())
     assert diff > 0  # batch effect present (Soft MoE test asserts absence)
+
+
+# ---------------------------------------------------------------------------
+# per-row serving routing (the batch-invariant serving contract)
+# ---------------------------------------------------------------------------
+
+
+def test_serving_mode_routes_per_row_and_dropless():
+    """Serving modes ("prefill"/"decode") must route each row alone with
+    a dropless budget: row 0's output is bitwise identical solo,
+    co-batched, and with different neighbors — and nothing drops even
+    under a capacity_factor that bites hard in train mode."""
+    cfg, params = _mk("tokens_choice", bpr=True)
+    cfg = dataclasses.replace(cfg, capacity_factor=0.25, group_size=4)
+    rng = jax.random.PRNGKey(3)
+    x1 = jax.random.normal(rng, (4, 16, 16))
+    x2 = x1.at[1:].set(jax.random.normal(jax.random.PRNGKey(4), (3, 16, 16)))
+    for mode in ("prefill", "decode"):
+        y1, m1 = moe_apply(params, cfg, x1, mode=mode)
+        y2, _ = moe_apply(params, cfg, x2, mode=mode)
+        solo, _ = moe_apply(params, cfg, x1[:1], mode=mode)
+        assert bool(jnp.array_equal(y1[0], y2[0])), mode
+        assert bool(jnp.array_equal(y1[:1], solo)), mode
+        assert float(m1["dropped_fraction"]) == 0.0
+
+
+def test_serving_mode_is_chunk_invariant():
+    """Per-token routing makes chunk boundaries invisible: routing a row
+    whole equals routing it in pieces (the serving chunked-prefill /
+    (k+1)-verify exactness at the layer level)."""
+    cfg, params = _mk("tokens_choice", bpr=True)
+    cfg = dataclasses.replace(cfg, capacity_factor=0.25)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 16, 16))
+    whole, _ = moe_apply(params, cfg, x, mode="decode")
+    parts = jnp.concatenate(
+        [moe_apply(params, cfg, x[:, a:b], mode="decode")[0]
+         for a, b in ((0, 5), (5, 6), (6, 16))], axis=1)
+    assert bool(jnp.array_equal(whole, parts))
+
+
+def test_batch_coupled_escape_hatch_reproduces_train_routing():
+    """MoEConfig.batch_coupled=True must force the old group routing in
+    serving modes, bit-for-bit equal to mode="train"."""
+    cfg, params = _mk("tokens_choice", bpr=True)
+    cfg = dataclasses.replace(cfg, capacity_factor=0.5, group_size=4)
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 16, 16))
+    y_train, _ = moe_apply(params, cfg, x, mode="train")
+    hatch = dataclasses.replace(cfg, batch_coupled=True)
+    y_hatch, _ = moe_apply(params, hatch, x, mode="decode")
+    assert bool(jnp.array_equal(y_train, y_hatch))
+
+
+def test_old_vs_new_equivalent_at_group_size_1():
+    """Pin: with group_size <= 1 the refactor changes nothing the old
+    path could distinguish — when capacity has slack, the coupled route
+    (any bpr) equals the per-row dropless route exactly; and one-token
+    (decode-shaped) calls are equal even under a tight capacity_factor
+    (capacity clamps to >= 1 = the whole call)."""
+    for bpr in (False, True):
+        cfg, params = _mk("tokens_choice", bpr=bpr)
+        slack = dataclasses.replace(cfg, capacity_factor=8.0, group_size=1)
+        x = jax.random.normal(jax.random.PRNGKey(7), (3, 16, 16))
+        y_old, _ = moe_apply(params, slack, x, mode="train")
+        y_new, _ = moe_apply(params, slack, x, mode="decode")
+        assert bool(jnp.array_equal(y_old, y_new)), f"bpr={bpr}"
+        tight = dataclasses.replace(cfg, capacity_factor=0.25, group_size=1)
+        x1 = jax.random.normal(jax.random.PRNGKey(8), (3, 1, 16))
+        y_old1, _ = moe_apply(params, tight, x1, mode="train")
+        y_new1, _ = moe_apply(params, tight, x1, mode="decode")
+        assert bool(jnp.array_equal(y_old1, y_new1)), f"bpr={bpr}"
+
+
+def test_dropped_fraction_rows_are_per_row():
+    """Telemetry rows must not mix rows: with group_size=1 each row's
+    dropped/kept stats must equal the same row's stats computed alone,
+    and the scalar must be the row mean."""
+    cfg, params = _mk("tokens_choice", bpr=False)
+    cfg = dataclasses.replace(cfg, capacity_factor=0.25, group_size=1)
+    x = jax.random.normal(jax.random.PRNGKey(9), (3, 32, 16))
+    _, m = moe_apply(params, cfg, x, telemetry=True, mode="train")
+    rows = m["telemetry"]["rows"]
+    assert rows["dropped_fraction"].shape == (3,)
+    assert rows["kept_fraction"].shape == (3,)
+    np.testing.assert_allclose(
+        float(m["dropped_fraction"]),
+        float(rows["dropped_fraction"].mean()), rtol=1e-6)
+    for i in range(3):
+        _, mi = moe_apply(params, cfg, x[i:i + 1], telemetry=True,
+                          mode="train")
+        np.testing.assert_allclose(
+            float(rows["dropped_fraction"][i]),
+            float(mi["telemetry"]["rows"]["dropped_fraction"][0]),
+            rtol=1e-6)
+
+
+def test_experts_choice_serving_mode_batch_invariant():
+    """Experts-choice selection is inherently cross-token; at serving it
+    scopes within the row with a full budget — row outputs must be
+    independent of neighbors, and nothing may go unselected."""
+    cfg, params = _mk("experts_choice")
+    cfg = dataclasses.replace(cfg, capacity_factor=0.5, group_size=4)
+    x1 = jax.random.normal(jax.random.PRNGKey(10), (4, 16, 16))
+    x2 = x1.at[1:].set(jax.random.normal(jax.random.PRNGKey(11), (3, 16, 16)))
+    y1, m = moe_apply(params, cfg, x1, mode="decode", telemetry=True)
+    y2, _ = moe_apply(params, cfg, x2, mode="decode")
+    assert bool(jnp.array_equal(y1[0], y2[0]))
+    assert float(m["dropped_fraction"]) == 0.0
+    assert m["telemetry"]["rows"]["dropped_fraction"].shape == (4,)

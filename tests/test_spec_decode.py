@@ -54,12 +54,17 @@ _PAGED = {"kw": {"backend": "paged", "block_size": 8}}
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("arch", ["llama3-8b", "gemma3-27b", "qwen2-0.5b"])
+@pytest.mark.parametrize("arch", ["llama3-8b", "gemma3-27b", "qwen2-0.5b",
+                                  "granite-moe-1b-a400m",
+                                  "deepseek-v2-lite-16b"])
 def test_greedy_spec_matches_baseline_paged(arch):
     """Greedy speculation must be token-for-token the plain paged engine's
-    stream on dense, GQA-bias, and sliding-window arch families —
-    whatever the drafter proposes, acceptance keeps exactly the argmax
-    chain."""
+    stream on dense, GQA-bias, sliding-window AND sparse-MoE arch
+    families — whatever the drafter proposes, acceptance keeps exactly
+    the argmax chain. The MoE rows became exact when serving routing went
+    per-row/dropless: the (B, k+1) verify forward now equals k+1 single
+    decode steps on sparse-MoE archs (previously ≈, a lifted
+    restriction)."""
     _, base = _run(arch, None, **_PAGED)
     eng, spec = _run(arch, SpecConfig(k=4), **_PAGED)
     assert [r.out for r in spec] == [r.out for r in base]
@@ -242,6 +247,39 @@ def test_rollback_restores_block_manager_state():
     plain.submit(ref)
     plain.run()
     assert req.out == ref.out
+
+
+def test_moe_rollback_exact_pool_state():
+    """Sparse-MoE + all-rejected drafts: rollback must leave the paged
+    pool equal to never having drafted — per-row dropless routing means
+    no MoE-side state exists that a rejected lane could have advanced,
+    so the pos-scrub + rollback_burst contract carries over verbatim.
+    Stream parity with the plain engine is asserted on top."""
+    cfg, params = _setup("granite-moe-1b-a400m")
+    spec_cfg = SpecConfig(k=4, drafter=_GarbageDrafter(cfg.vocab_size),
+                          disable_after_rejects=0)
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                      backend="paged", block_size=4, prefix_cache=False,
+                      spec=spec_cfg)
+    req = Request(prompt=[5, 4, 3, 2, 1], max_new_tokens=10)
+    eng.submit(req)
+    eng.run()
+    assert eng.spec_stats()["drafted"] > 0
+    assert eng.spec_stats()["accepted"] == 0  # garbage got rejected
+    assert eng.backend.mgr.num_used == 0  # drained: nothing leaked
+
+    plain = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                        backend="paged", block_size=4, prefix_cache=False)
+    ref = Request(prompt=[5, 4, 3, 2, 1], max_new_tokens=10)
+    plain.submit(ref)
+    plain.run()
+    assert req.out == ref.out
+    # pool `pos` arrays equal to the never-drafted engine's for every
+    # layer: the stale speculative writes are scrubbed, not just masked
+    for spec_c, plain_c in zip(eng.backend.cache, plain.backend.cache):
+        sp = np.asarray(spec_c["attn"]["pos"])
+        pl = np.asarray(plain_c["attn"]["pos"])
+        assert (np.sort(sp[sp >= 0]) == np.sort(pl[pl >= 0])).all()
 
 
 def test_rollback_all_blocks_freed_at_drain():

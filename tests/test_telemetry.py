@@ -109,16 +109,17 @@ def test_soft_moe_telemetry_matches_dense_oracle():
                 atol=2e-5, err_msg=f"{tk} (use_kernel={use_kernel})")
 
 
-def test_batch_variance_probe_reads_batch_coupling():
-    """Finite divergence exactly where routing couples rows: group-
-    routed BPR tokens-choice with binding capacity. ~0 on dense (no
-    routing at all) — the probe is the ROADMAP batch-invariant-serving
-    acceptance instrument, so its null must be clean."""
+def test_batch_variance_probe_null_on_group_routed_sparse():
+    """THE batch-invariant-serving acceptance criterion: even the
+    historically worst case — group-routed BPR tokens-choice with
+    binding capacity — must read ~0, because serving modes route each
+    row alone and droplessly (group/capacity knobs only bind in train
+    mode). ~0 on dense too (no routing at all)."""
     cfg, params = _moe_setup(group_size=4, capacity_factor=0.5, bpr=True)
     grouped = batch_variance_probe(cfg, params, [1, 2, 3, 4], batch_size=4,
                                    max_new_tokens=8, max_len=32)
     assert grouped["steps_compared"] > 0
-    assert grouped["divergence"] > 0
+    assert grouped["divergence"] < 1e-5
 
     dcfg = reduced(get_config("llama3-8b"))
     dparams = lm_init(jax.random.PRNGKey(0), dcfg)
@@ -126,6 +127,20 @@ def test_batch_variance_probe_reads_batch_coupling():
                                  max_new_tokens=8, max_len=32)
     assert dense["steps_compared"] > 0
     assert dense["divergence"] < 1e-5
+
+
+def test_batch_variance_probe_instrument_alive_via_escape_hatch():
+    """The ~0 readings above must be the routing's doing, not a dead
+    probe: forcing the old batch-coupled group routing at serving
+    (MoEConfig.batch_coupled=True) with BPR + binding capacity must
+    read FINITE divergence — capacity competition reaches the target
+    row again."""
+    cfg, params = _moe_setup(group_size=4, capacity_factor=0.5, bpr=True,
+                             batch_coupled=True)
+    coupled = batch_variance_probe(cfg, params, [1, 2, 3, 4], batch_size=4,
+                                   max_new_tokens=8, max_len=32)
+    assert coupled["steps_compared"] > 0
+    assert coupled["divergence"] > 0
 
 
 def test_batch_variance_probe_null_on_soft_moe():
