@@ -74,40 +74,21 @@ def traffic_bytes_bwd(m, d, s, fused: bool) -> int:
     return recompute + bwd_reads + 3 * x + 2 * phi + 2 * slots + 2 * y
 
 
-def _iter_jaxprs(jaxpr):
-    yield jaxpr
-    for eqn in jaxpr.eqns:
-        for v in eqn.params.values():
-            for sub in jax.tree_util.tree_leaves(
-                v, is_leaf=lambda l: isinstance(
-                    l, (jax.extend.core.Jaxpr, jax.extend.core.ClosedJaxpr))
-            ):
-                if isinstance(sub, jax.extend.core.ClosedJaxpr):
-                    yield from _iter_jaxprs(sub.jaxpr)
-                elif isinstance(sub, jax.extend.core.Jaxpr):
-                    yield from _iter_jaxprs(sub)
-
-
 def materialized_ms_shapes(fn, *args, m: int, s: int, m_pad: int = 0,
                            s_pad: int = 0):
     """Shapes of any intermediate carrying a full (m × s) plane (modulo
     block padding) anywhere in the jaxpr of ``fn`` — the tensors the
     fused path exists to eliminate. ``m_pad``/``s_pad`` are the
     block-padded extents the kernels actually use (derive them from the
-    same KernelConfig as the kernel call; 0 = unpadded only)."""
-    jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
-    m_dims = {m, m_pad or m}
-    s_dims = {s, s_pad or s}
-    bad = []
-    for j in _iter_jaxprs(jaxpr):
-        for eqn in j.eqns:
-            for var in list(eqn.outvars) + list(eqn.invars):
-                aval = getattr(var, "aval", None)
-                shape = getattr(aval, "shape", ())
-                if (any(dim in m_dims for dim in shape)
-                        and any(dim in s_dims for dim in shape)):
-                    bad.append(tuple(shape))
-    return sorted(set(bad))
+    same KernelConfig as the kernel call; 0 = unpadded only).
+
+    Thin wrapper over the repo's ONE jaxpr walker
+    (`repro.analysis.materialized_shapes`) so this CI proof and the
+    static-analysis passes can never diverge."""
+    from repro.analysis import ShapeRule, materialized_shapes
+
+    rule = ShapeRule((m, m_pad or m), (s, s_pad or s), "(m × s) plane")
+    return materialized_shapes(jax.make_jaxpr(fn)(*args).jaxpr, rule)
 
 
 def assert_no_ms_materialization(fn, *args, m: int, s: int, m_pad: int = 0,

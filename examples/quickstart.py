@@ -11,7 +11,6 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.base import MoEConfig

@@ -1,0 +1,51 @@
+"""Static contract linter: trace-time proofs of the serving stack's
+invariants (docs/static_analysis.md).
+
+Five registered passes over every jitted serving/training program:
+
+* ``materialization`` — no (m × S) Soft-MoE plane, no
+  (B, blocks·block_size) paged row view (ShapeRule predicates);
+* ``retrace``         — churn never changes a program's trace signature;
+* ``donation``        — pool-carrying programs donate their cache
+  buffers (read from the lowering's aliasing info);
+* ``dtype``           — accumulations agree with the declared
+  ``KernelConfig.acc_dtype``;
+* ``host-purity``     — AST lint: no host syncs in the tick path, no
+  import-scope jit, no import-time backend probes.
+
+CLI: ``python -m repro.analysis --all``. Pytest API: build specs with
+``build_program_specs(arch)`` (or hand-rolled ``ProgramSpec`` fixtures)
+and run ``run_passes(specs, [...], DEFAULT_ALLOWLIST)``.
+"""
+from .framework import (  # noqa: F401
+    AllowRule,
+    AnalysisReport,
+    Finding,
+    PASSES,
+    ProgramSpec,
+    ShapeRule,
+    apply_allowlist,
+    arg_signature,
+    iter_jaxprs,
+    materialized_shapes,
+    register_pass,
+    run_passes,
+)
+from .passes import (  # noqa: F401
+    donation_pass,
+    dtype_pass,
+    host_purity_findings,
+    host_purity_pass,
+    materialization_pass,
+    retrace_pass,
+    serve_side_sources,
+)
+from .programs import (  # noqa: F401
+    DEFAULT_ALLOWLIST,
+    GRID,
+    build_program_specs,
+    grid_specs,
+    kernel_program_specs,
+    serving_program_specs,
+    train_program_spec,
+)

@@ -1,0 +1,292 @@
+"""Pass-registry core of the contract linter (docs/static_analysis.md).
+
+The framework is deliberately small: a pass is a function
+``(specs, ctx) -> [Finding]`` registered under a name; a ``ProgramSpec``
+describes ONE jitted program (the real jitted object harvested off a
+live backend/engine, never a re-declaration that could drift) together
+with example arguments, churn variants, donation expectations, forbidden
+shape predicates and the declared accumulation dtype; an ``Allowlist``
+turns intentional exceptions into recorded, reasoned findings instead of
+failures. Everything is trace-time only — no program is ever executed.
+
+The single jaxpr walker lives here (``iter_jaxprs`` /
+``materialized_shapes``); `benchmarks/bench_kernels.py` wraps it, so the
+CI materialization proof and this linter cannot diverge.
+"""
+from __future__ import annotations
+
+import fnmatch
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+try:  # jax >= 0.4.16
+    from jax.extend.core import ClosedJaxpr, Jaxpr
+except ImportError:  # pragma: no cover - older jax
+    from jax.core import ClosedJaxpr, Jaxpr
+
+
+# ---------------------------------------------------------------------------
+# The one jaxpr walker
+# ---------------------------------------------------------------------------
+
+
+def iter_jaxprs(jaxpr):
+    """Yield `jaxpr` and every sub-jaxpr reachable through eqn params
+    (pjit bodies, scan/while/cond branches, custom_vjp closures, pallas
+    kernel jaxprs, ...). This is THE repo's jaxpr walker — every
+    materialization/dtype proof goes through it."""
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            leaves = jax.tree_util.tree_leaves(
+                v, is_leaf=lambda x: isinstance(x, (Jaxpr, ClosedJaxpr))
+            )
+            for leaf in leaves:
+                if isinstance(leaf, ClosedJaxpr):
+                    yield from iter_jaxprs(leaf.jaxpr)
+                elif isinstance(leaf, Jaxpr):
+                    yield from iter_jaxprs(leaf)
+
+
+@dataclass(frozen=True)
+class ShapeRule:
+    """Forbid any intermediate whose shape has a dim from `dims_a` AND a
+    dim from `dims_b` (e.g. the (m × S) Soft-MoE plane, the
+    (B, blocks·block_size) paged row view). Padded extents ride along in
+    the same sets."""
+
+    dims_a: tuple
+    dims_b: tuple
+    label: str
+
+    def flags(self, shape) -> bool:
+        return (
+            any(d in shape for d in self.dims_a)
+            and any(d in shape for d in self.dims_b)
+        )
+
+
+def materialized_shapes(jaxpr, rule: ShapeRule) -> List[tuple]:
+    """All distinct eqn-output shapes in `jaxpr` (and sub-jaxprs) flagged
+    by `rule`, sorted. Empty list == the predicate is proven absent."""
+    hits = set()
+    for j in iter_jaxprs(jaxpr):
+        for eqn in j.eqns:
+            for var in list(eqn.outvars) + list(eqn.invars):
+                aval = getattr(var, "aval", None)
+                shape = tuple(getattr(aval, "shape", ()))
+                if shape and rule.flags(shape):
+                    hits.add(shape)
+    return sorted(hits)
+
+
+# ---------------------------------------------------------------------------
+# Argument signatures (the retrace contract)
+# ---------------------------------------------------------------------------
+
+
+def arg_signature(args: tuple):
+    """Hashable stand-in for jax's jit cache key over `args`: pytree
+    structure + per-leaf (shape, dtype, weak). Two argument tuples with
+    equal signatures hit the same compiled executable; a signature change
+    under churn IS a retrace."""
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    sig = []
+    for leaf in leaves:
+        if isinstance(leaf, (bool, int, float, complex)):
+            # python scalars are weak-typed jit cache keys
+            sig.append(("py", type(leaf).__name__))
+        else:
+            dtype = getattr(leaf, "dtype", None)
+            sig.append((tuple(np.shape(leaf)), str(dtype),
+                        bool(getattr(leaf, "weak_type", False))))
+    return (str(treedef), tuple(sig))
+
+
+# ---------------------------------------------------------------------------
+# Program inventory
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ProgramSpec:
+    """One jitted program + the contracts the passes check it against.
+
+    ``fn`` must be the REAL jitted callable the serving/training stack
+    executes (harvested off a constructed backend/engine) so the linter
+    can never drift from production behavior. ``args`` is one full
+    example argument tuple; ``churn`` holds alternative tuples that model
+    request churn (different slots, tables, positions, padding) and must
+    all map to the same trace signature. ``donate`` lists argnums whose
+    buffers the program must donate (pool state). ``forbid`` lists
+    ShapeRules that must not appear in the jaxpr. ``acc_dtype`` +
+    ``dtype_policy`` configure the accumulation-dtype pass: "strict"
+    (all float reductions in acc_dtype, no dot downcast), "dots_only"
+    (reductions unchecked — see the train-step note in
+    docs/static_analysis.md), or "skip".
+    """
+
+    name: str
+    arch: str
+    fn: Callable
+    args: tuple
+    churn: tuple = ()
+    donate: tuple = ()
+    forbid: tuple = ()
+    acc_dtype: str = "float32"
+    dtype_policy: str = "strict"
+    notes: str = ""
+    _jaxpr: Optional[ClosedJaxpr] = field(default=None, repr=False)
+    _lowered: object = field(default=None, repr=False)
+
+    @property
+    def label(self) -> str:
+        return f"{self.name}@{self.arch}"
+
+    @property
+    def jitted(self) -> bool:
+        return hasattr(self.fn, "lower")
+
+    def jaxpr(self):
+        """Traced jaxpr of fn(*args), cached across passes."""
+        if self._jaxpr is None:
+            self._jaxpr = jax.make_jaxpr(self.fn)(*self.args)
+        return self._jaxpr
+
+    def lowered(self):
+        """Lowered (pre-compile) form — carries donation/aliasing info.
+        Only meaningful for jitted fns."""
+        if self._lowered is None:
+            self._lowered = self.fn.lower(*self.args)
+        return self._lowered
+
+
+# ---------------------------------------------------------------------------
+# Findings, allowlist, report
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Finding:
+    """One contract violation. ``where`` is a program label
+    ("paged/decode@llama3-8b") or a source location
+    ("src/repro/serve/x.py:12"); allowlisted findings keep the reason."""
+
+    pass_name: str
+    where: str
+    message: str
+    allowed: bool = False
+    reason: str = ""
+
+    def render(self) -> str:
+        mark = "ALLOWED" if self.allowed else "FAIL"
+        line = f"[{mark}] {self.pass_name}: {self.where}: {self.message}"
+        if self.allowed and self.reason:
+            line += f"\n          reason: {self.reason}"
+        return line
+
+
+@dataclass(frozen=True)
+class AllowRule:
+    """Intentional exception: findings of `pass_name` whose ``where``
+    fnmatch-es `pattern` are recorded (not failures). Every rule MUST
+    carry a reason — that reason is the documentation of the exception."""
+
+    pass_name: str
+    pattern: str
+    reason: str
+
+    def matches(self, f: Finding) -> bool:
+        return (
+            f.pass_name == self.pass_name
+            and fnmatch.fnmatch(f.where, self.pattern)
+        )
+
+
+def apply_allowlist(findings: Iterable[Finding],
+                    allowlist: Sequence[AllowRule]) -> List[Finding]:
+    out = []
+    for f in findings:
+        for rule in allowlist:
+            if rule.matches(f):
+                f.allowed, f.reason = True, rule.reason
+                break
+        out.append(f)
+    return out
+
+
+@dataclass
+class AnalysisReport:
+    findings: List[Finding] = field(default_factory=list)
+    checked: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def failures(self) -> List[Finding]:
+        return [f for f in self.findings if not f.allowed]
+
+    @property
+    def allowed(self) -> List[Finding]:
+        return [f for f in self.findings if f.allowed]
+
+    def ok(self) -> bool:
+        return not self.failures
+
+    def merge(self, other: "AnalysisReport"):
+        self.findings.extend(other.findings)
+        for k, v in other.checked.items():
+            self.checked[k] = self.checked.get(k, 0) + v
+
+    def render(self) -> str:
+        lines = []
+        for name in sorted(self.checked):
+            n_fail = sum(1 for f in self.failures if f.pass_name == name)
+            n_allow = sum(1 for f in self.allowed if f.pass_name == name)
+            status = "ok" if n_fail == 0 else f"{n_fail} FAILURES"
+            extra = f", {n_allow} allowlisted" if n_allow else ""
+            lines.append(
+                f"{name}: {self.checked[name]} checked, {status}{extra}"
+            )
+        for f in self.findings:
+            lines.append(f.render())
+        verdict = "PASS" if self.ok() else "FAIL"
+        lines.append(f"analysis: {verdict}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Pass registry
+# ---------------------------------------------------------------------------
+
+PASSES: Dict[str, Callable] = {}
+
+
+def register_pass(name: str):
+    """Register ``fn(specs) -> [Finding]`` under `name`. Adding a pass =
+    write the function, decorate it, document it — the CLI, the pytest
+    API and ``--passes`` filtering pick it up from this dict."""
+
+    def deco(fn):
+        PASSES[name] = fn
+        return fn
+
+    return deco
+
+
+def run_passes(specs: Sequence[ProgramSpec],
+               pass_names: Optional[Sequence[str]] = None,
+               allowlist: Sequence[AllowRule] = ()) -> AnalysisReport:
+    """Run the named passes (default: all registered) over `specs` and
+    fold the allowlist in. The pytest-facing entry point."""
+    report = AnalysisReport()
+    for name in pass_names or sorted(PASSES):
+        if name not in PASSES:
+            raise KeyError(
+                f"unknown pass {name!r}; registered: {sorted(PASSES)}"
+            )
+        findings, n = PASSES[name](specs)
+        report.findings.extend(apply_allowlist(findings, allowlist))
+        report.checked[name] = report.checked.get(name, 0) + n
+    return report

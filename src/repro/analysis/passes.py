@@ -1,0 +1,346 @@
+"""The five contract passes (docs/static_analysis.md has the taxonomy).
+
+Each pass is ``fn(specs) -> (findings, n_checked)`` registered in
+``framework.PASSES``. All of them are trace-time / source-level only —
+no program is executed, no device buffer is touched.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .framework import (
+    Finding,
+    ProgramSpec,
+    arg_signature,
+    iter_jaxprs,
+    materialized_shapes,
+    register_pass,
+)
+
+# ---------------------------------------------------------------------------
+# 1. materialization — forbidden intermediate shapes
+# ---------------------------------------------------------------------------
+
+
+@register_pass("materialization")
+def materialization_pass(specs: Sequence[ProgramSpec]):
+    """No jaxpr of a spec with ``forbid`` rules may contain an
+    intermediate matching any rule — the (m × S) Soft-MoE plane
+    (PAPER.md §2's linear-memory claim) and the (B, blocks·block_size)
+    paged row view are both instances of this one predicate."""
+    findings: List[Finding] = []
+    n = 0
+    for spec in specs:
+        if not spec.forbid:
+            continue
+        n += 1
+        jaxpr = spec.jaxpr()
+        for rule in spec.forbid:
+            shapes = materialized_shapes(jaxpr.jaxpr, rule)
+            if shapes:
+                findings.append(Finding(
+                    "materialization", spec.label,
+                    f"{rule.label} materialized: shapes {shapes}",
+                ))
+    return findings, n
+
+
+# ---------------------------------------------------------------------------
+# 2. retrace — one trace signature per program under churn
+# ---------------------------------------------------------------------------
+
+
+@register_pass("retrace")
+def retrace_pass(specs: Sequence[ProgramSpec]):
+    """Every churn variant of a program's arguments must produce the same
+    jit cache key (pytree structure + per-leaf shape/dtype/weakness).
+    This is the static half of the runtime ``jit_cache_sizes`` assertion:
+    churn changes VALUES, never signatures, so each program compiles
+    exactly once for the engine's lifetime."""
+    findings: List[Finding] = []
+    n = 0
+    for spec in specs:
+        if not spec.churn:
+            continue
+        n += 1
+        base = arg_signature(spec.args)
+        for i, variant in enumerate(spec.churn):
+            sig = arg_signature(variant)
+            if sig != base:
+                diffs = _signature_diff(base, sig)
+                findings.append(Finding(
+                    "retrace", spec.label,
+                    f"churn variant {i} changes the trace signature "
+                    f"({diffs}) — this program would recompile under "
+                    "churn",
+                ))
+    return findings, n
+
+
+def _signature_diff(a, b) -> str:
+    if a[0] != b[0]:
+        return "pytree structure differs"
+    out = []
+    for j, (la, lb) in enumerate(zip(a[1], b[1])):
+        if la != lb:
+            out.append(f"leaf {j}: {la} -> {lb}")
+    return "; ".join(out) or "unknown"
+
+
+# ---------------------------------------------------------------------------
+# 3. donation — pool buffers must alias in place
+# ---------------------------------------------------------------------------
+
+
+@register_pass("donation")
+def donation_pass(specs: Sequence[ProgramSpec]):
+    """Every argnum in ``spec.donate`` must be donated in the lowered
+    program (input/output aliasing), read back from jax's own
+    ``lowered.args_info`` — the compiled truth, not the python source.
+    A pool-carrying program that forgets ``donate_argnums`` silently
+    doubles its cache's memory on accelerators."""
+    findings: List[Finding] = []
+    n = 0
+    for spec in specs:
+        if not spec.donate:
+            continue
+        if not spec.jitted:
+            findings.append(Finding(
+                "donation", spec.label,
+                "program expects donation but is not jitted",
+            ))
+            continue
+        n += 1
+        # args_info mirrors the (args, kwargs) call structure
+        pos_info = spec.lowered().args_info[0]
+        for argnum in spec.donate:
+            leaves = jax.tree_util.tree_leaves(pos_info[argnum])
+            bad = [str(getattr(info, "_aval", "?")) for info in leaves
+                   if not info.donated]
+            if bad:
+                findings.append(Finding(
+                    "donation", spec.label,
+                    f"argnum {argnum} not donated "
+                    f"({len(bad)}/{len(leaves)} leaves, e.g. {bad[0]}) — "
+                    "missing donate_argnums",
+                ))
+    return findings, n
+
+
+# ---------------------------------------------------------------------------
+# 4. dtype — accumulation dtype discipline
+# ---------------------------------------------------------------------------
+
+_REDUCE_PRIMS = {
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+    "reduce",  # generic lax.reduce — jnp.sum upcasts, lax.reduce won't
+    "cumsum", "cumlogsumexp", "cummax", "cummin",
+}
+
+
+@register_pass("dtype")
+def dtype_pass(specs: Sequence[ProgramSpec]):
+    """Accumulation regions must agree with the declared
+    ``KernelConfig.acc_dtype``:
+
+    * every floating-point reduction (sum/max/min/prod/cumulative) must
+      accumulate in exactly ``acc_dtype`` — a bf16 reduction is a silent
+      precision loss, an f64 one a silent upcast;
+    * no dot_general may emit a dtype narrower than its widest floating
+      operand (bf16×bf16→bf16 is fine — the MXU accumulates f32
+      internally and the declared output is bf16 — but f32×f32→bf16
+      would silently discard accumulated precision).
+
+    ``dtype_policy="dots_only"`` skips the reduction rule — the train
+    step's backward legitimately reduce-sums bf16 cotangents when
+    transposing broadcasts (gradient dtype == forward compute dtype).
+    """
+    findings: List[Finding] = []
+    n = 0
+    for spec in specs:
+        if spec.dtype_policy == "skip":
+            continue
+        n += 1
+        acc = jnp.dtype(spec.acc_dtype)
+        reduce_bad = {}
+        dot_bad = {}
+        for j in iter_jaxprs(spec.jaxpr().jaxpr):
+            for eqn in j.eqns:
+                prim = eqn.primitive.name
+                if (prim in _REDUCE_PRIMS
+                        and spec.dtype_policy == "strict"):
+                    out = eqn.outvars[0].aval
+                    dt = getattr(out, "dtype", None)
+                    if (dt is not None
+                            and jnp.issubdtype(dt, jnp.floating)
+                            and dt != acc):
+                        key = (prim, str(dt))
+                        reduce_bad[key] = reduce_bad.get(key, 0) + 1
+                elif prim == "dot_general":
+                    fl = [v.aval.dtype for v in eqn.invars
+                          if jnp.issubdtype(v.aval.dtype, jnp.floating)]
+                    out_dt = eqn.outvars[0].aval.dtype
+                    if (fl and jnp.issubdtype(out_dt, jnp.floating)
+                            and out_dt.itemsize
+                            < max(d.itemsize for d in fl)):
+                        key = (str(fl), str(out_dt))
+                        dot_bad[key] = dot_bad.get(key, 0) + 1
+        for (prim, dt), count in sorted(reduce_bad.items()):
+            word = "downcast" if jnp.dtype(dt).itemsize < acc.itemsize \
+                else "upcast"
+            findings.append(Finding(
+                "dtype", spec.label,
+                f"{count}× {prim} accumulates in {dt} ({word}), declared "
+                f"acc_dtype is {spec.acc_dtype}",
+            ))
+        for (operands, out_dt), count in sorted(dot_bad.items()):
+            findings.append(Finding(
+                "dtype", spec.label,
+                f"{count}× dot_general {operands} -> {out_dt} discards "
+                "accumulated precision below its widest operand",
+            ))
+    return findings, n
+
+
+# ---------------------------------------------------------------------------
+# 5. host-purity — AST lint over serve-side python
+# ---------------------------------------------------------------------------
+
+_SYNC_METHODS = {"item", "block_until_ready"}
+_SYNC_JAX_FUNCS = {"device_get", "block_until_ready"}
+_IMPORT_TIME_BACKEND = {"default_backend", "devices", "local_devices",
+                        "device_count"}
+
+
+def _dotted(node) -> str:
+    """'jax.jit' for Attribute(Name('jax'), 'jit'); '' if not a plain
+    dotted name."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+class _HostPurityVisitor(ast.NodeVisitor):
+    """Three rules over one file:
+
+    R1 anywhere: no host syncs — ``.item()`` / ``.block_until_ready()``
+       method calls, ``jax.device_get`` / ``jax.block_until_ready``
+       calls. Any of these inside the engine tick serializes the device
+       pipeline; the telemetry drain is the one sanctioned sync point
+       (allowlisted, not exempted here).
+    R2 import scope: no ``jax.jit(...)`` outside function bodies — an
+       import-scope jit builds its cache before any config exists and
+       pins it for every later caller.
+    R3 import scope: no backend probes (``jax.default_backend()``,
+       ``jax.devices()``, ...) outside function bodies — an import-time
+       "interpret" global freezes the backend choice at import order
+       (the bug kernels/tuning.py documents removing).
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: List[Finding] = []
+        self.depth = 0  # function nesting; 0 == import scope
+
+    def _flag(self, node, msg):
+        self.findings.append(Finding(
+            "host-purity", f"{self.path}:{node.lineno}", msg
+        ))
+
+    def visit_FunctionDef(self, node):
+        # decorators run at the enclosing scope: @jax.jit (bare or via
+        # functools.partial) on a module-level def is an import-scope jit
+        if self.depth == 0:
+            for dec in node.decorator_list:
+                if any(_dotted(sub) == "jax.jit"
+                       for sub in ast.walk(dec)):
+                    self._flag(dec, "jax.jit at import scope (decorator)")
+                    break
+        for dec in node.decorator_list:
+            self.visit(dec)
+        node.decorator_list = []
+        self.depth += 1
+        self.generic_visit(node)
+        self.depth -= 1
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node):
+        self.depth += 1
+        self.generic_visit(node)
+        self.depth -= 1
+
+    def visit_Call(self, node):
+        name = _dotted(node.func)
+        if isinstance(node.func, ast.Attribute):
+            attr = node.func.attr
+            if attr in _SYNC_METHODS and not name.startswith("jax."):
+                self._flag(node, f".{attr}() is a host sync")
+            if (name.startswith("jax.")
+                    and name.split(".")[-1] in _SYNC_JAX_FUNCS):
+                self._flag(node, f"{name}() is a host sync")
+            if self.depth == 0:
+                tail = name.split(".")[-1]
+                if name == "jax.jit":
+                    self._flag(node, "jax.jit at import scope")
+                elif (name.startswith("jax.")
+                        and tail in _IMPORT_TIME_BACKEND):
+                    self._flag(
+                        node,
+                        f"{name}() at import scope freezes the backend "
+                        "choice at import time",
+                    )
+        self.generic_visit(node)
+
+
+def host_purity_findings(paths: Sequence[str]) -> List[Finding]:
+    """Run the host-purity AST lint over explicit file paths (the
+    fixture-facing entry; the registered pass lints the serve stack)."""
+    findings: List[Finding] = []
+    for path in paths:
+        with open(path) as f:
+            tree = ast.parse(f.read(), filename=path)
+        rel = os.path.relpath(path, _repo_root()) \
+            if os.path.isabs(path) else path
+        visitor = _HostPurityVisitor(rel)
+        visitor.visit(tree)
+        findings.extend(visitor.findings)
+    return findings
+
+
+def _repo_root() -> str:
+    # src/repro/analysis/passes.py -> repo root
+    return os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", "..")
+    )
+
+
+def serve_side_sources() -> List[str]:
+    """The host-purity scan surface: the engine/serving modules plus the
+    kernel tuning layer (where the import-time interpret global once
+    lived)."""
+    root = _repo_root()
+    out = []
+    for sub in ("src/repro/serve", "src/repro/kernels"):
+        d = os.path.join(root, sub)
+        out.extend(
+            os.path.join(d, f) for f in sorted(os.listdir(d))
+            if f.endswith(".py")
+        )
+    return out
+
+
+@register_pass("host-purity")
+def host_purity_pass(specs: Sequence[ProgramSpec]):
+    paths = serve_side_sources()
+    return host_purity_findings(paths), len(paths)

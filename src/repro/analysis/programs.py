@@ -1,0 +1,467 @@
+"""Program inventory: every jitted serving/training program as a
+``ProgramSpec``.
+
+The specs harvest the REAL jitted callables off constructed backends,
+engines and trainers (``be._decode``, ``eng._sample``,
+``trainer.train_step``, ...) — never re-declarations — so the linter
+checks exactly what production executes and cannot drift from it.
+Argument tuples mirror the call-site conversions byte for byte
+(``jnp.int32(slot)``, ``jnp.asarray([toks], jnp.int32)``, host numpy
+sampling params, ...); churn variants change VALUES the way request
+churn does (slots, tables, padding, liveness) and must never change the
+trace signature.
+
+Geometry: ``batch=3`` rows, ``max_len=112`` (7 blocks × 16), spec lanes
+``k+1=4``. 3 and 112 are distinct from every `reduced()` model axis
+(d_model 64+, vocab 256, heads ≤4, head_dim 16, d_ff 128) so the
+(B, blocks·block_size) ShapeRule can only match the paged row view —
+the same dim-disjointness argument ``benchmarks/bench_kernels.py``
+documents. ``_check_dims`` enforces it against the actual param/cache
+avals instead of assuming.
+"""
+from __future__ import annotations
+
+import tempfile
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ASSIGNED_NAMES, get_config, reduced
+from ..models import build_model, lm_init
+from .framework import AllowRule, ProgramSpec, ShapeRule
+
+GRID = ASSIGNED_NAMES
+
+BATCH = 3
+MAX_LEN = 112
+BLOCK_SIZE = 16
+SPEC_K = 3  # verify lanes = k+1 = 4
+
+
+# ---------------------------------------------------------------------------
+# The allowlist: every intentional exception, with its reason
+# ---------------------------------------------------------------------------
+
+DEFAULT_ALLOWLIST = (
+    AllowRule(
+        "donation", "engine/sample@*",
+        "the sampler reads the engine's persistent logits buffer "
+        "non-destructively; the same buffer feeds the next prefill/"
+        "decode write after sampling, so donating it would free live "
+        "engine state",
+    ),
+    AllowRule(
+        "materialization", "paged/verify@*",
+        "S>1 programs take the jnp gather path — the Pallas paged-"
+        "attention kernel is single-query; tracked by the ROADMAP "
+        "'ragged paged-attention kernel family' item",
+    ),
+    AllowRule(
+        "materialization", "paged/prefill_chunk@*",
+        "chunked prefill (S>1) takes the jnp gather path — same "
+        "ROADMAP 'ragged paged-attention kernel family' item as verify",
+    ),
+    AllowRule(
+        "materialization", "paged/decode@deepseek-v2-lite-16b",
+        "MLA absorbed-form decode keeps the gather path (the paged "
+        "kernel covers GQA only — layers/attention.py documents it); "
+        "the MLA latent-pool kernel variant is in the same ROADMAP item",
+    ),
+    AllowRule(
+        "host-purity", "src/repro/kernels/tuning.py:*",
+        "autotune's timing harness must block_until_ready around the "
+        "candidate it times — it runs offline (bench/startup), never "
+        "inside the engine tick",
+    ),
+    AllowRule(
+        "host-purity", "src/repro/serve/telemetry.py:*",
+        "TelemetryAggregator.drain is the engine's one sanctioned "
+        "device->host sync point — called once per tick AFTER the "
+        "tokens of the tick are committed (docs/observability.md)",
+    ),
+)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _check_dims(label: str, trees, rules: tuple):
+    """Assert no param/cache leaf is itself flagged by a ShapeRule — the
+    dim-disjointness precondition of the shape predicates (a model
+    tensor that legitimately carries BOTH marker dims would make the
+    rule vacuously noisy)."""
+    for tree in trees:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            shape = tuple(np.shape(leaf))
+            for rule in rules:
+                if shape and rule.flags(shape):
+                    raise ValueError(
+                        f"{label}: model tensor of shape {shape} "
+                        f"collides with rule {rule.label!r}; pick "
+                        "different geometry"
+                    )
+
+
+def _row_view_rule(batch: int, view_len: int) -> ShapeRule:
+    return ShapeRule(
+        (batch,), (view_len,),
+        f"({batch} × {view_len}) paged row-view gather",
+    )
+
+
+def _i32(x):
+    return jnp.asarray(np.asarray(x, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# serving programs
+# ---------------------------------------------------------------------------
+
+
+def serving_program_specs(arch: str, batch: int = BATCH,
+                          max_len: int = MAX_LEN,
+                          block_size: int = BLOCK_SIZE
+                          ) -> List[ProgramSpec]:
+    """Specs for every jitted program of one arch's contiguous AND paged
+    engines (+ sampler, + speculative accept where supported)."""
+    from ..serve.engine import ServeEngine
+    from ..serve.spec_decode import SpecConfig
+
+    cfg = reduced(get_config(arch))
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    spec_ok = cfg.attention is not None and cfg.ssm is None
+    eng_c = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                        backend="contiguous")
+    eng_p = ServeEngine(cfg, params, batch_size=batch, max_len=max_len,
+                        backend="paged", block_size=block_size,
+                        spec=SpecConfig(k=SPEC_K) if spec_ok else None)
+    cb, pb = eng_c.backend, eng_p.backend
+
+    view_len = pb.blocks_per_row * block_size
+    _check_dims(f"{arch} serving geometry", (params, pb.cache),
+                (_row_view_rule(batch, view_len),
+                 _row_view_rule(1, view_len)))
+
+    V = cfg.vocab_size
+    lanes = SPEC_K + 1
+    buf = jnp.zeros((batch, V), jnp.float32)
+    specs: List[ProgramSpec] = []
+
+    # -- contiguous ---------------------------------------------------------
+    chunk_c = min(32, cb.max_chunk)
+
+    def chunk_args(slot, fill, pad=0):
+        toks = [0] * pad + [fill] * (chunk_c - pad)
+        poss = [-1] * pad + list(range(chunk_c - pad))
+        return (jnp.int32(slot), jnp.asarray([toks], jnp.int32),
+                jnp.asarray([poss], jnp.int32))
+
+    specs.append(ProgramSpec(
+        "contiguous/prefill_chunk", arch, cb._prefill_chunk,
+        (params, cb.pool.cache, buf) + chunk_args(0, 1),
+        churn=(
+            (params, cb.pool.cache, buf) + chunk_args(2, 7),
+            (params, cb.pool.cache, buf) + chunk_args(1, 3, pad=5),
+        ),
+        donate=(1, 2),
+        acc_dtype="float32",
+    ))
+
+    def decode_args(toks, pos):
+        return (params, jnp.asarray(np.asarray(toks, np.int32)),
+                jnp.asarray(np.asarray(pos, np.int32)), cb.pool.cache)
+
+    specs.append(ProgramSpec(
+        "contiguous/decode", arch, cb._decode,
+        decode_args([[1]] * batch, [4] * batch),
+        churn=(
+            decode_args([[7], [2], [9]], [10, 3, 55]),
+            decode_args([[0]] * batch, [-1, 6, -1]),  # inactive rows
+        ),
+        donate=(3,),
+        acc_dtype="float32",
+    ))
+
+    def cverify_args(pos):
+        toks = np.ones((batch, lanes), np.int32)
+        return (params, jnp.asarray(toks),
+                jnp.asarray(np.asarray(pos, np.int32)), cb.pool.cache)
+
+    specs.append(ProgramSpec(
+        "contiguous/verify", arch, cb._verify,
+        cverify_args([[5, 6, 7, 8]] * batch),
+        churn=(cverify_args([[5, 6, -1, -1], [1, -1, -1, -1],
+                             [9, 10, 11, -1]]),),
+        donate=(3,),
+        acc_dtype="float32",
+    ))
+
+    specs.append(ProgramSpec(
+        "contiguous/invalidate", arch, cb._invalidate,
+        (cb.pool.cache, jnp.asarray(np.full((batch, lanes), 6, np.int32))),
+        churn=((cb.pool.cache,
+                jnp.asarray(np.full((batch, lanes), -1, np.int32))),),
+        donate=(0,),
+        dtype_policy="skip",  # pure scatter, no accumulation
+    ))
+
+    specs.append(ProgramSpec(
+        "contiguous/clear_slot", arch, cb.pool._clear,
+        (cb.pool.cache, jnp.int32(0)),
+        churn=((cb.pool.cache, jnp.int32(batch - 1)),),
+        donate=(0,),
+        dtype_policy="skip",
+    ))
+
+    # -- paged --------------------------------------------------------------
+    chunk_p = min(32, pb.max_chunk)
+    table1 = jnp.asarray(np.arange(1, pb.blocks_per_row + 1,
+                                   dtype=np.int32)[None])
+    tables = jnp.asarray(
+        np.arange(1, batch * pb.blocks_per_row + 1,
+                  dtype=np.int32).reshape(batch, pb.blocks_per_row))
+
+    def pchunk_args(slot, fill, pad=0):
+        toks = [0] * pad + [fill] * (chunk_p - pad)
+        poss = [-1] * pad + list(range(chunk_p - pad))
+        return (params, pb.cache, buf, jnp.int32(slot), table1,
+                jnp.asarray([toks], jnp.int32),
+                jnp.asarray([poss], jnp.int32))
+
+    specs.append(ProgramSpec(
+        "paged/prefill_chunk", arch, pb._prefill_chunk,
+        pchunk_args(0, 1),
+        churn=(pchunk_args(2, 7), pchunk_args(1, 3, pad=9)),
+        donate=(1, 2),
+        forbid=((_row_view_rule(1, view_len),)
+                if cfg.attention is not None else ()),
+        acc_dtype="float32",
+    ))
+
+    def pdecode_args(toks, pos):
+        return (params, jnp.asarray(np.asarray(toks, np.int32)),
+                jnp.asarray(np.asarray(pos, np.int32)), tables, pb.cache)
+
+    specs.append(ProgramSpec(
+        "paged/decode", arch, pb._decode,
+        pdecode_args([[1]] * batch, [4] * batch),
+        churn=(
+            pdecode_args([[7], [2], [9]], [10, 3, 55]),
+            pdecode_args([[0]] * batch, [-1, 6, -1]),
+        ),
+        donate=(4,),
+        forbid=((_row_view_rule(batch, view_len),)
+                if cfg.attention is not None else ()),
+        acc_dtype="float32",
+        notes="the PR 4 no-row-view kernel proof, generalized",
+    ))
+
+    def pverify_args(pos):
+        toks = np.ones((batch, lanes), np.int32)
+        return (params, jnp.asarray(toks),
+                jnp.asarray(np.asarray(pos, np.int32)), tables, pb.cache)
+
+    specs.append(ProgramSpec(
+        "paged/verify", arch, pb._verify,
+        pverify_args([[5, 6, 7, 8]] * batch),
+        churn=(pverify_args([[5, -1, -1, -1], [1, 2, -1, -1],
+                             [9, 10, 11, -1]]),),
+        donate=(4,),
+        forbid=((_row_view_rule(batch, view_len),)
+                if cfg.attention is not None else ()),
+        acc_dtype="float32",
+    ))
+
+    specs.append(ProgramSpec(
+        "paged/invalidate", arch, pb._invalidate,
+        (pb.cache, jnp.asarray(np.full((batch, lanes), 6, np.int32)),
+         tables),
+        churn=((pb.cache,
+                jnp.asarray(np.full((batch, lanes), -1, np.int32)),
+                tables),),
+        donate=(0,),
+        dtype_policy="skip",
+    ))
+
+    ids = jnp.asarray(np.arange(1, 9, dtype=np.int32))
+    ids2 = jnp.asarray(np.full((8,), pb.num_blocks, np.int32))  # all pad
+    specs.append(ProgramSpec(
+        "paged/clear_blocks", arch, pb._clear_blocks,
+        (pb.cache, ids), churn=((pb.cache, ids2),),
+        donate=(0,), dtype_policy="skip",
+    ))
+    specs.append(ProgramSpec(
+        "paged/copy_blocks", arch, pb._copy_blocks,
+        (pb.cache, ids, ids2), churn=((pb.cache, ids2, ids),),
+        donate=(0,), dtype_policy="skip",
+    ))
+    if pb._clear_ssm is not None:
+        specs.append(ProgramSpec(
+            "paged/clear_ssm", arch, pb._clear_ssm,
+            (pb.cache, jnp.int32(0)),
+            churn=((pb.cache, jnp.int32(batch - 1)),),
+            donate=(0,), dtype_policy="skip",
+        ))
+
+    # -- engine-level -------------------------------------------------------
+    def sample_args(temp, step):
+        return (
+            buf,
+            np.asarray(temp, np.float32),
+            np.zeros((batch,), np.int32),
+            np.ones((batch,), np.float32),
+            np.zeros((batch,), np.int32),
+            np.asarray(step, np.int32),
+        )
+
+    specs.append(ProgramSpec(
+        "engine/sample", arch, eng_c._sample,
+        sample_args([0.0] * batch, [0] * batch),
+        churn=(sample_args([0.7, 0.0, 2.0], [3, 0, 9]),),
+        donate=(0,),  # intentionally NOT donated -> allowlist entry
+        acc_dtype="float32",
+    ))
+
+    if eng_p._spec is not None:
+        sd = eng_p._spec
+        k = SPEC_K
+
+        def accept_args(n_draft, temp):
+            logits = jnp.zeros((batch, lanes, V), jnp.float32)
+            drafts = jnp.asarray(np.ones((batch, k), np.int32))
+            return (logits, drafts,
+                    jnp.asarray(np.asarray(n_draft, np.int32)),
+                    np.asarray(temp, np.float32),
+                    np.zeros((batch,), np.int32),
+                    np.ones((batch,), np.float32),
+                    np.zeros((batch,), np.int32),
+                    np.zeros((batch,), np.int32))
+
+        specs.append(ProgramSpec(
+            "engine/spec_accept", arch, sd._accept,
+            accept_args([k] * batch, [0.0] * batch),
+            churn=(accept_args([0, 1, k], [0.5, 0.0, 1.5]),),
+            acc_dtype="float32",
+        ))
+        specs.append(ProgramSpec(
+            "engine/spec_finite", arch, sd._finite,
+            (buf,), churn=((jnp.ones((batch, V), jnp.float32),),),
+            dtype_policy="skip",  # pure isfinite reduction over bools
+        ))
+
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# training program
+# ---------------------------------------------------------------------------
+
+
+def train_program_spec(arch: str) -> List[ProgramSpec]:
+    """The Trainer's own jitted train step (value_and_grad + AdamW).
+
+    ``dtype_policy="dots_only"``: the backward legitimately reduce-sums
+    bf16 cotangents when transposing broadcasts (gradient dtype follows
+    the forward compute dtype), so the strict reduction rule applies to
+    serving programs only — the dot-downcast rule still holds here.
+    """
+    from ..data import SyntheticLM, SyntheticSeq2Seq
+    from ..optim import OptimizerConfig
+    from ..train import Trainer, TrainerConfig
+    from ..train.step import init_train_state
+
+    cfg = reduced(get_config(arch))
+    init_fn, loss_fn, _ = build_model(cfg)
+    if cfg.encoder_layers > 0:
+        data = SyntheticSeq2Seq(
+            vocab_size=cfg.vocab_size, seq_len=16,
+            num_frames=cfg.frontend.num_embeds,
+            frame_dim=cfg.frontend.embed_dim, batch_size=2,
+        )
+    else:
+        data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16,
+                           batch_size=2)
+    with tempfile.TemporaryDirectory() as d:
+        trainer = Trainer(
+            TrainerConfig(total_steps=1, checkpoint_dir=d),
+            loss_fn, init_fn, OptimizerConfig(total_steps=1), data,
+        )
+    state = init_train_state(jax.random.PRNGKey(0), init_fn)
+    return [ProgramSpec(
+        "train/step", arch, trainer.train_step,
+        (state, data.batch(0)),
+        churn=((state, data.batch(1)),),
+        donate=(0,),
+        acc_dtype="float32",
+        dtype_policy="dots_only",
+    )]
+
+
+# ---------------------------------------------------------------------------
+# Soft-MoE kernel program (the paper's (m × S) claim, fwd + bwd)
+# ---------------------------------------------------------------------------
+
+
+def kernel_program_specs() -> List[ProgramSpec]:
+    """The fused Soft-MoE train path: grad of a kernel-routed loss must
+    carry no (m × S) plane in EITHER direction — the generalized form of
+    `benchmarks.bench_kernels.check_materialization` (dims pairwise
+    distinct: m=320, d=160, s=48, d_ff=224, b=3)."""
+    from ..configs.base import MoEConfig
+    from ..core import moe_apply, moe_init
+    from ..kernels.tuning import config_from_moe
+
+    m, d, n, b = 320, 160, 48, 3
+    cfg = MoEConfig(variant="soft", num_experts=n, expert_d_ff=224)
+    s = n * cfg.slots_per_expert
+    params = moe_init(jax.random.PRNGKey(0), d, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, m, d))
+    kc = config_from_moe(cfg, m=m, d=d)
+    m_pad = -(-m // kc.block_tokens) * kc.block_tokens
+    s_pad = -(-s // kc.block_slots) * kc.block_slots
+
+    def loss(p):
+        return (moe_apply(p, cfg, x, use_kernel=True)[0] ** 2).mean()
+
+    rule = ShapeRule(
+        (m, m_pad), (s, s_pad),
+        f"(m × S) Soft-MoE plane (m={m}/{m_pad}, s={s}/{s_pad})",
+    )
+    return [ProgramSpec(
+        "kernels/soft_moe_grad", "soft-moe", jax.grad(loss), (params,),
+        forbid=(rule,),
+        acc_dtype=kc.acc_dtype,
+        dtype_policy="dots_only",  # bwd cotangent sums follow x's dtype
+        notes="PAPER.md §2 linear-memory claim, fwd+bwd",
+    )]
+
+
+# ---------------------------------------------------------------------------
+# top-level inventory
+# ---------------------------------------------------------------------------
+
+
+def build_program_specs(arch: str, train: bool = True) -> List[ProgramSpec]:
+    """Full spec list for one arch (serving + train step)."""
+    specs = serving_program_specs(arch)
+    if train:
+        specs += train_program_spec(arch)
+    return specs
+
+
+def grid_specs(archs: Optional[List[str]] = None,
+               train: bool = True,
+               progress=None) -> List[ProgramSpec]:
+    """Specs for the whole arch grid plus the arch-independent Soft-MoE
+    kernel program."""
+    specs: List[ProgramSpec] = []
+    for arch in archs or GRID:
+        if progress:
+            progress(f"building specs: {arch}")
+        specs += build_program_specs(arch, train=train)
+    specs += kernel_program_specs()
+    return specs

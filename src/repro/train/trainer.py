@@ -68,7 +68,15 @@ class Trainer:
                                       keep=cfg.keep_checkpoints)
         step_fn = make_train_step(loss_fn, opt_cfg,
                                   microbatches=cfg.microbatches)
-        self.train_step = jax.jit(step_fn, **(jit_kwargs or {}))
+        # Donate the train state: the loop reassigns
+        # ``state, _ = train_step(state, batch)`` and never reads the old
+        # state again, so XLA aliases params/opt moments in place instead
+        # of holding two copies across the step (no-op on CPU). Explicit
+        # jit_kwargs still override — pass donate_argnums=() to opt out.
+        # Proved by the `donation` pass (src/repro/analysis/).
+        jit_kwargs = dict(jit_kwargs) if jit_kwargs else {}
+        jit_kwargs.setdefault("donate_argnums", (0,))
+        self.train_step = jax.jit(step_fn, **jit_kwargs)
         self.init_fn = init_fn
         self.watchdog = StragglerWatchdog(factor=cfg.straggler_factor)
         self._preempted = False

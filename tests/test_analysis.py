@@ -1,0 +1,353 @@
+"""Contract-linter tests (src/repro/analysis/, docs/static_analysis.md).
+
+Two halves:
+
+* falsifiability — every pass flags a deliberately-bad fixture (a
+  materializing ref-path program, a shape-dependent retrace, a
+  non-donating pool program, a silent upcast/downcast, a syncing tick
+  loop). A linter that cannot fail proves nothing.
+* the real stack — one small arch's full program inventory runs every
+  pass clean modulo the reasoned allowlist, and the bench wrappers
+  still route through the one framework walker.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    DEFAULT_ALLOWLIST,
+    AllowRule,
+    ProgramSpec,
+    ShapeRule,
+    apply_allowlist,
+    arg_signature,
+    host_purity_findings,
+    run_passes,
+)
+from repro.analysis.passes import (
+    donation_pass,
+    dtype_pass,
+    materialization_pass,
+    retrace_pass,
+)
+
+# ---------------------------------------------------------------------------
+# materialization
+# ---------------------------------------------------------------------------
+
+_M, _D, _N, _B = 48, 32, 8, 2  # pairwise-distinct marker dims
+
+
+def _moe_grad_spec(use_kernel: bool) -> ProgramSpec:
+    from repro.configs.base import MoEConfig
+    from repro.core import moe_apply, moe_init
+    from repro.kernels.tuning import config_from_moe
+
+    cfg = MoEConfig(variant="soft", num_experts=_N, expert_d_ff=24)
+    s = _N * cfg.slots_per_expert
+    params = moe_init(jax.random.PRNGKey(0), _D, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (_B, _M, _D))
+    kc = config_from_moe(cfg, m=_M, d=_D)
+    m_pad = -(-_M // kc.block_tokens) * kc.block_tokens
+    s_pad = -(-s // kc.block_slots) * kc.block_slots
+
+    def loss(p):
+        return (moe_apply(p, cfg, x, use_kernel=use_kernel)[0] ** 2).mean()
+
+    rule = ShapeRule((_M, m_pad), (s, s_pad), "(m × s) plane")
+    name = "kernel" if use_kernel else "ref"
+    return ProgramSpec(f"fixture/moe_grad_{name}", "test",
+                       jax.grad(loss), (params,), forbid=(rule,))
+
+
+def test_materialization_flags_ref_path():
+    # the jnp reference path materializes the (m × s) logits/weights —
+    # the known-bad construct the fused kernels exist to eliminate
+    findings, n = materialization_pass([_moe_grad_spec(use_kernel=False)])
+    assert n == 1
+    assert findings and "(m × s) plane" in findings[0].message
+
+
+def test_materialization_clean_on_kernel_path():
+    # uses the bench geometry (m=320, s=48, blocks 128): at the fixture's
+    # tiny dims the kernel's (block_tokens × block_slots) tile IS the
+    # whole plane, so only a multi-tile geometry can witness cleanliness
+    from repro.analysis import kernel_program_specs
+
+    spec = next(s for s in kernel_program_specs()
+                if s.name == "kernels/soft_moe_grad")
+    findings, n = materialization_pass([spec])
+    assert n == 1 and findings == []
+
+
+def test_materialization_skips_specs_without_rules():
+    spec = ProgramSpec("fixture/norule", "test",
+                       lambda x: x + 1, (jnp.zeros(3),))
+    findings, n = materialization_pass([spec])
+    assert n == 0 and findings == []
+
+
+# ---------------------------------------------------------------------------
+# retrace
+# ---------------------------------------------------------------------------
+
+
+def _pad_to_multiple(ids, mult):
+    n = -(-len(ids) // mult) * mult
+    out = np.zeros((n,), np.int32)
+    out[: len(ids)] = ids
+    return jnp.asarray(out)
+
+
+def test_retrace_flags_shape_dependent_program():
+    # a "pad to the next multiple" helper whose width follows the id
+    # count — exactly the churn-dependent shape the fixed-width
+    # _pad_ids batching in serve/block_manager.py exists to avoid
+    spec = ProgramSpec(
+        "fixture/bad_pad", "test", lambda ids: ids * 2,
+        (_pad_to_multiple(np.arange(3), 4),),
+        churn=((_pad_to_multiple(np.arange(11), 4),),),
+    )
+    findings, n = retrace_pass([spec])
+    assert n == 1
+    assert findings and "recompile" in findings[0].message
+
+
+def test_retrace_clean_on_fixed_shapes():
+    spec = ProgramSpec(
+        "fixture/good_pad", "test", lambda ids: ids * 2,
+        (jnp.zeros((8,), jnp.int32),),
+        churn=((jnp.ones((8,), jnp.int32),),),
+    )
+    findings, n = retrace_pass([spec])
+    assert n == 1 and findings == []
+
+
+def test_arg_signature_distinguishes_weak_scalars():
+    assert arg_signature((1.0,)) != arg_signature((jnp.float32(1.0),))
+
+
+# ---------------------------------------------------------------------------
+# donation
+# ---------------------------------------------------------------------------
+
+
+def _pool_like():
+    return [{"attn": {"k": jnp.zeros((2, 4)), "pos": jnp.zeros((2, 4))}}]
+
+
+def _scrub(cache, slot):
+    return jax.tree_util.tree_map(lambda a: a * 0, cache)
+
+
+def test_donation_flags_non_donating_pool_program():
+    spec = ProgramSpec("fixture/undonated", "test", jax.jit(_scrub),
+                       (_pool_like(), jnp.int32(0)), donate=(0,))
+    findings, n = donation_pass([spec])
+    assert n == 1
+    assert findings and "not donated" in findings[0].message
+
+
+def test_donation_clean_when_donated():
+    spec = ProgramSpec(
+        "fixture/donated", "test",
+        jax.jit(_scrub, donate_argnums=(0,)),
+        (_pool_like(), jnp.int32(0)), donate=(0,),
+    )
+    findings, n = donation_pass([spec])
+    assert n == 1 and findings == []
+
+
+def test_donation_flags_unjitted_program():
+    spec = ProgramSpec("fixture/plain", "test", _scrub,
+                       (_pool_like(), jnp.int32(0)), donate=(0,))
+    findings, _ = donation_pass([spec])
+    assert findings and "not jitted" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# dtype
+# ---------------------------------------------------------------------------
+
+
+def test_dtype_flags_bf16_accumulation_downcast():
+    # jnp.sum auto-upcasts bf16 accumulation, so the bad fixture must
+    # reach for the lax-level reduce the upcast machinery doesn't wrap
+    def bad(x):
+        return jax.lax.reduce(x.astype(jnp.bfloat16),
+                              jnp.bfloat16(0), jax.lax.add, (0,))
+
+    spec = ProgramSpec("fixture/bf16_sum", "test", bad,
+                       (jnp.zeros((4, 3)),), acc_dtype="float32")
+    findings, n = dtype_pass([spec])
+    assert n == 1
+    assert findings and "downcast" in findings[0].message
+
+
+def test_dtype_flags_silent_f32_upcast():
+    # declared bf16 accumulation, actual f32 reductions: the "silent
+    # upcast" direction — costs memory/bandwidth the config says it
+    # shouldn't spend
+    spec = ProgramSpec("fixture/f32_sum", "test",
+                       lambda x: jnp.sum(x, axis=0),
+                       (jnp.zeros((4, 3), jnp.float32),),
+                       acc_dtype="bfloat16")
+    findings, n = dtype_pass([spec])
+    assert n == 1
+    assert findings and "upcast" in findings[0].message
+
+
+def test_dtype_clean_on_declared_acc():
+    def ok(x):
+        acc = jnp.sum(x.astype(jnp.float32), axis=0)
+        return acc.astype(jnp.bfloat16)
+
+    spec = ProgramSpec("fixture/f32_acc", "test", ok,
+                       (jnp.zeros((4, 3), jnp.bfloat16),),
+                       acc_dtype="float32")
+    findings, n = dtype_pass([spec])
+    assert n == 1 and findings == []
+
+
+def test_dtype_dots_only_policy_skips_reductions():
+    def bwd_like(x):
+        return jnp.sum(x.astype(jnp.bfloat16), axis=0)
+
+    spec = ProgramSpec("fixture/bwd", "test", bwd_like,
+                       (jnp.zeros((4, 3)),), acc_dtype="float32",
+                       dtype_policy="dots_only")
+    findings, n = dtype_pass([spec])
+    assert n == 1 and findings == []
+
+
+# ---------------------------------------------------------------------------
+# host-purity
+# ---------------------------------------------------------------------------
+
+_BAD_TICK = '''\
+import jax
+
+JITTED = jax.jit(lambda x: x + 1)           # import-scope jit
+INTERPRET = jax.default_backend() != "tpu"  # import-time backend global
+
+
+@jax.jit
+def decorated(x):                            # import-scope jit, decorator
+    return x
+
+
+class Engine:
+    def tick(self):
+        v = self.logits.item()               # host sync in the tick loop
+        jax.device_get(self.state)           # host sync
+        self.out.block_until_ready()         # host sync
+'''
+
+
+def test_host_purity_flags_syncing_tick_loop(tmp_path):
+    p = tmp_path / "bad_engine.py"
+    p.write_text(_BAD_TICK)
+    findings = host_purity_findings([str(p)])
+    msgs = "\n".join(f.message for f in findings)
+    assert sum("host sync" in f.message for f in findings) == 3
+    assert "jax.jit at import scope" in msgs
+    assert "decorator" in msgs
+    assert "freezes the backend choice" in msgs
+
+
+def test_host_purity_clean_file(tmp_path):
+    p = tmp_path / "good_engine.py"
+    p.write_text(
+        "import jax\n\n\n"
+        "def build(cfg):\n"
+        "    interpret = jax.default_backend() != 'tpu'\n"
+        "    return jax.jit(lambda x: x + 1), interpret\n"
+    )
+    assert host_purity_findings([str(p)]) == []
+
+
+def test_host_purity_repo_clean_modulo_allowlist():
+    report = run_passes([], ["host-purity"], DEFAULT_ALLOWLIST)
+    assert report.ok(), report.render()
+    # the sanctioned syncs are RECORDED, not invisible
+    assert any("telemetry" in f.where for f in report.allowed)
+
+
+# ---------------------------------------------------------------------------
+# allowlist mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_allowlist_matches_and_keeps_reason():
+    from repro.analysis import Finding
+
+    f = Finding("donation", "engine/sample@llama3-8b", "not donated")
+    out = apply_allowlist(
+        [f], [AllowRule("donation", "engine/sample@*", "by design")]
+    )
+    assert out[0].allowed and out[0].reason == "by design"
+    g = Finding("dtype", "engine/sample@llama3-8b", "x")
+    assert not apply_allowlist(
+        [g], [AllowRule("donation", "engine/sample@*", "r")]
+    )[0].allowed
+
+
+def test_unknown_pass_rejected():
+    with pytest.raises(KeyError):
+        run_passes([], ["nonesuch"])
+
+
+# ---------------------------------------------------------------------------
+# the real stack: one small arch end to end
+# ---------------------------------------------------------------------------
+
+
+def test_serving_stack_passes_on_small_arch():
+    from repro.analysis import build_program_specs
+
+    specs = build_program_specs("qwen2-0.5b", train=False)
+    report = run_passes(
+        specs, ["materialization", "retrace", "donation", "dtype"],
+        DEFAULT_ALLOWLIST,
+    )
+    assert report.ok(), report.render()
+    # the inventory is the real thing: paged decode + donation checked
+    assert report.checked["donation"] >= 10
+    assert any(s.name == "paged/decode" and s.forbid for s in specs)
+
+
+def test_trainer_step_donates_state():
+    from repro.analysis import train_program_spec
+
+    spec = train_program_spec("qwen2-0.5b")[0]
+    findings, n = donation_pass([spec])
+    assert n == 1 and findings == [], findings
+
+
+# ---------------------------------------------------------------------------
+# bench wrappers delegate to the framework walker
+# ---------------------------------------------------------------------------
+
+
+def test_bench_wrapper_routes_through_framework():
+    import sys
+
+    sys.path.insert(0, ".")
+    try:
+        from benchmarks.bench_kernels import materialized_ms_shapes
+    finally:
+        sys.path.pop(0)
+
+    def outer(a, b):
+        return a @ b  # (5, 9) product plane
+
+    shapes = materialized_ms_shapes(
+        outer, jnp.zeros((5, 7)), jnp.zeros((7, 9)), m=5, s=9
+    )
+    assert (5, 9) in shapes
+
+    def clean(a):
+        return a.sum()
+
+    assert materialized_ms_shapes(clean, jnp.zeros((5, 7)), m=5, s=9) == []
